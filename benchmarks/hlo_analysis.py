@@ -1,0 +1,54 @@
+"""HLO forensics for the perf loop: rank collectives by trip-weighted wire
+bytes, with the op shape and originating jax op (from HLO metadata) so each
+hypothesis in EXPERIMENTS.md §Perf points at a concrete source line.
+
+Usage: PYTHONPATH=src:. python -m benchmarks.hlo_analysis <file.hlo.txt> [k]
+"""
+from __future__ import annotations
+
+import re
+import sys
+
+from repro.launch.dryrun import (_WIRE_FACTOR, _shape_bytes,
+                                 parse_computations, trip_multipliers)
+
+
+def top_collectives(hlo_text: str, k: int = 15) -> list[dict]:
+    comps = parse_computations(hlo_text)
+    mult = trip_multipliers(hlo_text, comps)
+    rows = []
+    for name, lines in comps.items():
+        w = mult.get(name, 1.0)
+        for line in lines:
+            line = line.strip()
+            m = re.match(r"(?:ROOT\s+)?%?[\w.-]+\s*=\s*(\([^)]*\)|[^\s]+)\s+"
+                         r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                         r"collective-permute)(?:-start)?(?:\.\d+)?\(", line)
+            if not m:
+                continue
+            b = _shape_bytes(m.group(1))
+            meta = re.search(r'op_name="([^"]+)"', line)
+            rows.append({
+                "op": m.group(2), "shape": m.group(1)[:60],
+                "comp": name[:40], "trips": w,
+                "wire_bytes": b * w * _WIRE_FACTOR[m.group(2)],
+                "jax_op": (meta.group(1)[-110:] if meta else "?"),
+            })
+    rows.sort(key=lambda r: -r["wire_bytes"])
+    return rows[:k]
+
+
+def main() -> None:
+    path = sys.argv[1]
+    k = int(sys.argv[2]) if len(sys.argv) > 2 else 15
+    txt = open(path).read()
+    rows = top_collectives(txt, k)
+    total = sum(r["wire_bytes"] for r in top_collectives(txt, 10_000))
+    print(f"total trip-weighted wire bytes/device: {total:.3e}")
+    for r in rows:
+        print(f"{r['wire_bytes']:.3e}  {r['op']:<18} x{r['trips']:<5.0f} "
+              f"{r['shape']:<45} {r['jax_op']}")
+
+
+if __name__ == "__main__":
+    main()

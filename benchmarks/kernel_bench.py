@@ -1,0 +1,57 @@
+"""Kernel-layer micro-benchmarks: streaming_matvec / bsr_spmv / fused
+pagerank_step vs their jnp references.
+
+On this CPU container the Pallas kernels run in interpret mode (Python
+loop — wall time is meaningless), so the *reported* timing is the jnp
+reference path, and the kernel's value is correctness + the VMEM/BlockSpec
+structure validated by the sweep tests.  ``derived`` records the per-tile
+VMEM working set, which is the TPU-relevant number.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.sparse import BSRMatrix
+from repro.kernels import ref
+
+
+def _time(f, *args, reps=5):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        f(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(reps):
+        r = f(*args)
+        jax.tree.leaves(r)[0].block_until_ready()
+    return (time.time() - t0) / reps * 1e6
+
+
+def run() -> dict:
+    N = M = 2048
+    B = 8
+    W = jax.random.normal(jax.random.PRNGKey(0), (N, M), jnp.float32)
+    X = jax.random.normal(jax.random.PRNGKey(1), (B, M), jnp.float32)
+    t_ref = _time(jax.jit(ref.streaming_matvec_ref), W, X)
+
+    bn = bm = 256
+    vmem_kib = (bn * bm * 4 + B * bm * 4 + B * bn * 4) / 1024
+
+    rng = np.random.default_rng(0)
+    A = rng.normal(size=(2048, 2048)).astype(np.float32)
+    A[rng.random(size=A.shape) > 0.05] = 0.0
+    bsr = BSRMatrix.from_dense(A, bs=128)
+    x = jnp.asarray(rng.normal(size=2048).astype(np.float32))
+    t_bsr_ref = _time(jax.jit(lambda d, c, x: ref.bsr_spmv_ref(d, c, x)),
+                      bsr.blocks, bsr.block_cols, x)
+    sparsity = 1.0 - float(np.count_nonzero(A)) / A.size
+    blocks_frac = bsr.max_blocks / (2048 // 128)
+
+    return {"name": "kernel_bench", "us_per_call": t_ref,
+            "derived": (f"matvec2048_ref={t_ref:.0f}us;"
+                        f"tile_vmem={vmem_kib:.0f}KiB;"
+                        f"bsr_ref={t_bsr_ref:.0f}us;"
+                        f"bsr_sparsity={sparsity:.3f};"
+                        f"bsr_block_budget_frac={blocks_frac:.2f}")}

@@ -1,0 +1,127 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, derive the three terms:
+
+    compute term    = HLO_FLOPs / (chips x 197e12 FLOP/s bf16)
+    memory term     = HLO_bytes / (chips x 819e9 B/s HBM)
+    collective term = collective_wire_bytes / (chips x 50e9 B/s per link)
+
+Sources (see DESIGN.md §6 / EXPERIMENTS.md caveats):
+  * FLOPs/bytes: trip-count-corrected dot statistics parsed from the
+    partitioned HLO (``dryrun.dot_stats``) — raw ``cost_analysis()`` counts
+    every ``while`` body once (verified), so it is reported but not used.
+    Parsed numbers are PER DEVICE (the partitioned module), so the formulas
+    below drop the ``chips x`` factor — it is already divided out.
+  * collective bytes: trip-count-corrected per-device wire bytes from the
+    HLO text (all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute), ring-factor 2x for all-reduce.
+  * MODEL_FLOPS = 6*N*D (train) / 2*N_active*B (decode) per device — the
+    useful-work floor; ratio to HLO FLOPs exposes remat/padding waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link (ICI)
+
+
+def model_flops_per_device(arch: str, shape_name: str, n_devices: int,
+                           remat_factor: float = 1.0) -> float:
+    """Useful FLOPs per device per step: the 6ND / 2ND floor."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / n_devices
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / n_devices
+    # decode: one token for the whole batch
+    return 2.0 * n_active * shape.global_batch / n_devices
+
+
+def analyze_cell(rec: dict) -> dict:
+    """Roofline terms for one dry-run JSON record (per-device quantities)."""
+    flops = rec["dots"]["dot_flops"]
+    hbm_bytes = rec["dots"]["dot_bytes"]
+    wire = sum(v["wire_bytes"] for v in rec.get("collectives", {}).values())
+
+    compute_t = flops / PEAK_FLOPS
+    memory_t = hbm_bytes / HBM_BW
+    coll_t = wire / LINK_BW
+    terms = {"compute": compute_t, "memory": memory_t, "collective": coll_t}
+    bottleneck = max(terms, key=terms.get)
+    total = max(terms.values())
+
+    mf = model_flops_per_device(rec["arch"], rec["shape"], rec["n_devices"])
+    useful_ratio = mf / flops if flops else 0.0
+    # roofline fraction: useful FLOPs against what the bottleneck allows
+    achievable_flops = mf / total if total else 0.0
+    roofline_frac = achievable_flops / PEAK_FLOPS
+
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute_t, "memory_s": memory_t, "collective_s": coll_t,
+        "bottleneck": bottleneck,
+        "model_flops_per_dev": mf,
+        "hlo_flops_per_dev": flops,
+        "useful_ratio": useful_ratio,
+        "roofline_frac": roofline_frac,
+        "peak_gib": (rec["memory"].get("peak_bytes") or 0) / 2**30,
+    }
+
+
+def load_records(dryrun_dir: str = "experiments/dryrun",
+                 mesh: str = "pod") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("status") == "ok" and r.get("mesh") == mesh:
+            recs.append(r)
+    return recs
+
+
+def render_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "bottleneck | useful ratio | roofline frac | peak GiB |")
+    sep = "|" + "---|" * 9
+    out = [hdr, sep]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.3f} | {r['peak_gib']:.2f} |")
+    return "\n".join(out)
+
+
+def run() -> dict:
+    recs = load_records()
+    rows = [analyze_cell(r) for r in recs]
+    n_bound = {}
+    for r in rows:
+        n_bound[r["bottleneck"]] = n_bound.get(r["bottleneck"], 0) + 1
+    return {"name": "roofline", "us_per_call": 0.0,
+            "derived": f"cells={len(rows)};bottlenecks={n_bound}"}
+
+
+def main() -> None:
+    for mesh in ("pod", "multipod"):
+        recs = load_records(mesh=mesh)
+        if not recs:
+            continue
+        rows = [analyze_cell(r) for r in recs]
+        print(f"\n### mesh = {mesh} ({len(rows)} cells)\n")
+        print(render_table(rows))
+
+
+if __name__ == "__main__":
+    main()

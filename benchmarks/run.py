@@ -1,0 +1,41 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  The dry-run/roofline artifacts
+(64 production-mesh compiles) are produced separately by
+``python -m repro.launch.dryrun`` (they take ~an hour); ``roofline`` here
+summarizes whatever artifacts exist.
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (fig5_routing, fig6a_matvec_latency,
+                            fig6b_pagerank_throughput, kernel_bench,
+                            roofline, table1_design)
+
+    quick = "--quick" in sys.argv
+    benches = [
+        fig5_routing.run,
+        fig6a_matvec_latency.run,
+        (lambda: fig6b_pagerank_throughput.run(
+            sizes=[1000, 2000] if quick else None,
+            iters=20 if quick else 100)),
+        table1_design.run,
+        kernel_bench.run,
+        roofline.run,
+    ]
+    print("name,us_per_call,derived")
+    for bench in benches:
+        try:
+            r = bench()
+            print(f"{r['name']},{r['us_per_call']:.2f},{r['derived']}")
+        except Exception as e:          # keep the harness running
+            name = getattr(bench, "__module__", str(bench))
+            print(f"{name},ERROR,{type(e).__name__}:{e}")
+            raise
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Regenerate the roofline appendices of EXPERIMENTS.md from the dry-run
+artifacts (baseline + optimized, pod + multipod)."""
+from __future__ import annotations
+
+import re
+
+from benchmarks.roofline import analyze_cell, load_records, render_table
+
+
+def section(dirname: str, mesh: str, title: str) -> str:
+    recs = load_records(dirname, mesh=mesh)
+    if not recs:
+        return f"### {title}\n\n(no artifacts in {dirname})\n"
+    rows = [analyze_cell(r) for r in recs]
+    counts: dict[str, int] = {}
+    for r in rows:
+        counts[r["bottleneck"]] = counts.get(r["bottleneck"], 0) + 1
+    worst = min(rows, key=lambda r: r["roofline_frac"])
+    best = max(rows, key=lambda r: r["roofline_frac"])
+    hdr = (f"### {title} — {len(rows)} cells; bottlenecks: {counts}; "
+           f"best roofline frac {best['roofline_frac']:.3f} "
+           f"({best['arch']}×{best['shape']}), worst "
+           f"{worst['roofline_frac']:.4f} ({worst['arch']}×{worst['shape']})")
+    return hdr + "\n\n" + render_table(rows) + "\n"
+
+
+def main() -> None:
+    out = ["## Appendix A — BASELINE roofline tables (paper-faithful "
+           "first compile)\n"]
+    out.append(section("experiments/dryrun_baseline", "pod",
+                       "baseline, single pod (16x16 = 256 chips)"))
+    out.append(section("experiments/dryrun_baseline", "multipod",
+                       "baseline, multi-pod (2x16x16 = 512 chips)"))
+    out.append("\n## Appendix B — OPTIMIZED roofline tables (after §Perf "
+               "iterations)\n")
+    out.append(section("experiments/dryrun", "pod",
+                       "optimized, single pod (16x16 = 256 chips)"))
+    out.append(section("experiments/dryrun", "multipod",
+                       "optimized, multi-pod (2x16x16 = 512 chips)"))
+    text = "\n".join(out)
+
+    with open("EXPERIMENTS.md") as f:
+        doc = f.read()
+    doc = re.sub(r"## Appendix A —.*", "", doc, flags=re.S).rstrip()
+    doc += "\n\n" + text
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(doc)
+    print("EXPERIMENTS.md appendices updated "
+          f"({text.count('|') // 10} table rows)")
+
+
+if __name__ == "__main__":
+    main()

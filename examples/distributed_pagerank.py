@@ -1,0 +1,58 @@
+"""Pod-scale distributed PageRank — the paper's fabric schedule as real
+collectives, on 16 simulated devices (the same code path the 512-chip
+dry-run compiles).
+
+The vertical bus is the ``P('model')`` layout of the rank vector, the
+horizontal bus is the ``psum`` over the mesh row, and the adder-column
+re-injection is the diagonal broadcast (DESIGN.md §2).
+
+Run:  PYTHONPATH=src python examples/distributed_pagerank.py
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph import generators as gen
+from repro.graph import transition as tr
+from repro.launch.mesh import make_mesh
+from repro.pagerank.dense import pagerank_dense_fixed
+from repro.pagerank.distributed import (make_sharded_inputs_dense,
+                                        pagerank_distributed)
+
+
+def main() -> None:
+    n, iters = 1024, 100
+    mesh = make_mesh((4, 4), ("data", "model"))
+    print(f"mesh: {mesh.shape} over {mesh.size} devices")
+
+    src, dst = gen.protein_network(n, seed=3)
+    H = tr.build_transition_dense(src, dst, n)
+    Hd = make_sharded_inputs_dense(H, mesh)
+    print(f"H: {H.shape} sharded P('data','model') -> "
+          f"{Hd.sharding.shard_shape(H.shape)} per device")
+
+    f = jax.jit(lambda H: pagerank_distributed(H, mesh, n_iters=iters))
+    pr = f(Hd).block_until_ready()
+    t0 = time.time()
+    pr = f(Hd).block_until_ready()
+    dt = time.time() - t0
+
+    ref = pagerank_dense_fixed(H, n_iters=iters)
+    np.testing.assert_allclose(np.asarray(pr), np.asarray(ref), rtol=2e-4,
+                               atol=1e-8)
+    txt = f.lower(Hd).compile().as_text()
+    n_ar = txt.count(" all-reduce(") + txt.count(" all-reduce-start(")
+    print(f"{iters} fabric-schedule iterations: {dt * 1e3:.1f} ms "
+          f"(16 simulated devices, CPU)")
+    print(f"collectives in compiled HLO: all-reduce x{n_ar} "
+          f"(horizontal bus + diagonal re-injection)")
+    print(f"distributed == single-device reference: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Batched serving example: continuous batching over a small GQA model.
+
+Every decode matmul is the paper's workload — a GEMV against stationary
+weights (DESIGN.md §2); on the production mesh these run under the
+fabric-MV collective schedule the decode dry-run cells lower.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.serve import Request, ServeEngine
+
+
+def lm_small() -> ModelConfig:
+    return ModelConfig(
+        name="lm-serve", family="dense", n_layers=4, d_model=256,
+        n_heads=8, n_kv_heads=4, d_ff=768, vocab_size=4096, head_dim=32,
+        dtype="float32", remat_policy="none", rope_theta=10_000.0)
+
+
+def main() -> None:
+    cfg = lm_small()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServeEngine(cfg, params, max_len=256)
+
+    rng = np.random.default_rng(7)
+    requests = [
+        Request(uid=i,
+                prompt=rng.integers(0, cfg.vocab_size, size=rng.integers(4, 24),
+                                    dtype=np.int32),
+                max_new_tokens=int(rng.integers(8, 32)),
+                temperature=0.0 if i % 2 == 0 else 0.8)
+        for i in range(10)
+    ]
+    print(f"serving {len(requests)} requests on 4 slots "
+          f"(continuous batching)...")
+    t0 = time.time()
+    engine.serve(requests, n_slots=4)
+    dt = time.time() - t0
+    tokens = sum(len(r.output) for r in requests)
+    print(f"done: {tokens} tokens in {dt:.1f}s ({tokens / dt:.1f} tok/s, "
+          f"CPU interpret)")
+    for r in requests[:4]:
+        mode = "greedy" if r.temperature == 0 else f"T={r.temperature}"
+        print(f"  req {r.uid} [{mode}] len(prompt)={len(r.prompt)} -> "
+              f"{len(r.output)} tokens: {r.output[:8]}...")
+    assert all(r.done for r in requests)
+    print("serve_lm: OK")
+
+
+if __name__ == "__main__":
+    main()

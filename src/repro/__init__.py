@@ -1,0 +1,2 @@
+"""repro: the PageRank-fabric paper as a multi-pod JAX/TPU framework."""
+__version__ = "0.1.0"

@@ -1,0 +1,15 @@
+"""internlm2-1.8b [dense]: 24L d_model=2048 16H (GQA kv=8) d_ff=8192
+vocab=92544 [arXiv:2403.17297; hf]."""
+from repro.configs.base import ModelConfig
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="internlm2-1.8b", family="dense", n_layers=24, d_model=2048,
+        n_heads=16, n_kv_heads=8, d_ff=8192, vocab_size=92544,
+        head_dim=128, rope_theta=1_000_000.0)
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="internlm2-1.8b-smoke", family="dense", n_layers=2, d_model=48,
+        n_heads=4, n_kv_heads=2, d_ff=96, vocab_size=128, head_dim=12,
+        dtype="float32", remat_policy="none")

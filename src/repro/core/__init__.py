@@ -1,0 +1,5 @@
+# The paper's primary contribution: messaging-based programmable fabric
+# (isa/fabric/schedule/timing) + its TPU-mesh adaptation (fabric_matvec).
+from repro.core import fabric, fabric_matvec, isa, schedule, timing
+
+__all__ = ["fabric", "fabric_matvec", "isa", "schedule", "timing"]

@@ -1,0 +1,270 @@
+"""Functional simulator of the messaging-based programmable fabric.
+
+The fabric is an R x C grid of "sites" (Fig. 1A).  Each site owns
+
+* a stored float value (its "FPU register"),
+* ``next_opcode`` / ``next_dest`` registers (programmed by ``Prog`` messages),
+* four ports: messages arrive from *left* and *top*, leave to *right* and
+  *down*.  Messages travel only right/down and wrap circularly (the paper's
+  human-chain analogy), so any site can reach any other.
+
+Routing (Fig. 1A, Fig. 5): a message whose destination address equals the
+site's own address is consumed/executed; otherwise it is forwarded **down**
+if the destination row differs, else **right**.
+
+Two execution modes mirror the paper:
+
+* **hop mode** (:func:`step`) — cycle-by-cycle synchronous message passing,
+  used to reproduce Fig. 2 and the Fig. 5 testbench bit-exactly.
+* **bus mode** (:func:`vbus_mul`, :func:`hbus_reduce_rows`) — the single-step
+  vertical-bus broadcast and horizontal-bus reduction used by the Fig. 3
+  matrix-vector schedule.  On TPU these become all-gather / reduce-scatter
+  (see ``core/fabric_matvec.py``).
+
+Everything is vectorized struct-of-arrays JAX; `lax.scan` drives multi-cycle
+simulations so the whole simulator is jit-able.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import isa
+from repro.core.isa import Message
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Fabric:
+    """Full architectural state of an R x C fabric."""
+
+    values: jax.Array        # (R, C) float32 — stored FPU values
+    next_opcode: jax.Array   # (R, C) int32
+    next_dest: jax.Array     # (R, C) int32
+    right: Message           # (R, C) message on each right-going output wire
+    down: Message            # (R, C) message on each down-going output wire
+    conflicts: jax.Array     # () int32 — port-contention events (should be 0
+                             # for every schedule the paper runs; we count
+                             # rather than model arbitration, and tests assert 0)
+
+    @property
+    def shape(self) -> tuple[int, int]:
+        return self.values.shape
+
+    @staticmethod
+    def create(rows: int, cols: int) -> "Fabric":
+        # The adder column is exempt from the site budget: the paper counts
+        # "(N x M) + N" sites separately, and its Fig.-4C tiling model uses
+        # full 64x64 = 4096 matrix tiles (DESIGN.md errata — 64x64 data
+        # sites + 64 adders is 4160, one column over the 12-bit space).
+        if rows * (cols - 1) > isa.MAX_SITES:
+            raise ValueError(
+                f"{rows}x{cols} exceeds the {isa.ADDR_BITS}-bit address space "
+                f"({isa.MAX_SITES} sites + adder column)")
+        z = jnp.zeros((rows, cols), jnp.float32)
+        zi = jnp.zeros((rows, cols), jnp.int32)
+        return Fabric(values=z, next_opcode=zi, next_dest=zi,
+                      right=Message.empty((rows, cols)),
+                      down=Message.empty((rows, cols)),
+                      conflicts=jnp.zeros((), jnp.int32))
+
+
+def addresses(rows: int, cols: int) -> jax.Array:
+    """Row-major linear site addresses, (R, C) int32."""
+    return (jnp.arange(rows, dtype=jnp.int32)[:, None] * cols
+            + jnp.arange(cols, dtype=jnp.int32)[None, :])
+
+
+def _route_is_down(dest: jax.Array, rows: int, cols: int,
+                   my_row: jax.Array) -> jax.Array:
+    """True -> forward down; False -> forward right (for non-local messages)."""
+    dest_row = dest // cols
+    return dest_row != my_row
+
+
+def _select_msg(pred: jax.Array, a: Message, b: Message) -> Message:
+    pick = lambda x, y: jnp.where(pred, x, y)
+    return Message(opcode=pick(a.opcode, b.opcode), dest=pick(a.dest, b.dest),
+                   value=pick(a.value, b.value),
+                   next_opcode=pick(a.next_opcode, b.next_opcode),
+                   next_dest=pick(a.next_dest, b.next_dest))
+
+
+def _mask_msg(keep: jax.Array, m: Message) -> Message:
+    """NOP-out message slots where ``keep`` is False."""
+    return Message(opcode=jnp.where(keep, m.opcode, isa.NOP), dest=m.dest,
+                   value=m.value, next_opcode=m.next_opcode,
+                   next_dest=m.next_dest)
+
+
+@partial(jax.jit, static_argnames=())
+def step(state: Fabric, inject_left: Message, inject_top: Message) -> Fabric:
+    """One synchronous fabric cycle.
+
+    ``inject_left``: (R,) messages presented at the left ports of column 0
+    (the user/testbench side, Fig. 5's ``LeftMessage``).
+    ``inject_top``: (C,) messages presented at the top ports of row 0.
+
+    Returns the next state; the new ``right``/``down`` wire fields are what an
+    observer (e.g. Fig. 5's ``RightMessage`` / ``DownMessage`` probes on the
+    monitored site) sees after this cycle.
+    """
+    rows, cols = state.shape
+    addr = addresses(rows, cols)
+    my_row = addr // cols
+
+    # ---- 1. incoming messages -------------------------------------------- #
+    # Left port of column c receives the right-wire of column c-1 (torus wrap
+    # at column 0); an externally injected message takes priority at the edge.
+    wrap_l = jax.tree.map(lambda x: jnp.roll(x, 1, axis=1), state.right)
+    from_left = wrap_l
+    inj_l = Message(
+        opcode=jnp.zeros((rows, cols), jnp.int32).at[:, 0].set(inject_left.opcode),
+        dest=jnp.zeros((rows, cols), jnp.int32).at[:, 0].set(inject_left.dest),
+        value=jnp.zeros((rows, cols), jnp.float32).at[:, 0].set(inject_left.value),
+        next_opcode=jnp.zeros((rows, cols), jnp.int32).at[:, 0].set(inject_left.next_opcode),
+        next_dest=jnp.zeros((rows, cols), jnp.int32).at[:, 0].set(inject_left.next_dest))
+    from_left = _select_msg(inj_l.is_live(), inj_l, from_left)
+
+    wrap_t = jax.tree.map(lambda x: jnp.roll(x, 1, axis=0), state.down)
+    from_top = wrap_t
+    inj_t = Message(
+        opcode=jnp.zeros((rows, cols), jnp.int32).at[0, :].set(inject_top.opcode),
+        dest=jnp.zeros((rows, cols), jnp.int32).at[0, :].set(inject_top.dest),
+        value=jnp.zeros((rows, cols), jnp.float32).at[0, :].set(inject_top.value),
+        next_opcode=jnp.zeros((rows, cols), jnp.int32).at[0, :].set(inject_top.next_opcode),
+        next_dest=jnp.zeros((rows, cols), jnp.int32).at[0, :].set(inject_top.next_dest))
+    from_top = _select_msg(inj_t.is_live(), inj_t, from_top)
+
+    # ---- 2. classify each incoming message ------------------------------- #
+    def classify(m: Message):
+        live = m.is_live()
+        local = live & (m.dest == addr)
+        fwd = live & ~local
+        goes_down = fwd & _route_is_down(m.dest, rows, cols, my_row)
+        goes_right = fwd & ~goes_down
+        return local, goes_down, goes_right
+
+    l_local, l_down, l_right = classify(from_left)
+    t_local, t_down, t_right = classify(from_top)
+
+    # ---- 3. execute local messages --------------------------------------- #
+    # Two ports can deliver in the same cycle; apply top first then left
+    # (deterministic order; the paper's schedules never land two messages on
+    # one site in one cycle except the adder column, where order is
+    # commutative for A_ADD).
+    values = state.values
+    next_op = state.next_opcode
+    next_dst = state.next_dest
+    emitted = Message.empty((rows, cols))
+
+    def apply_local(values, next_op, next_dst, emitted, m, is_local):
+        term = is_local & jnp.isin(m.opcode, jnp.asarray(isa.TERMINAL_OPS))
+        strm = is_local & jnp.isin(m.opcode, jnp.asarray(isa.STREAMING_OPS))
+        new_vals = isa.terminal_result(m.opcode, values, m.value)
+        values = jnp.where(term, new_vals, values)
+        is_prog = is_local & (m.opcode == isa.PROG)
+        next_op = jnp.where(is_prog, m.next_opcode, next_op)
+        next_dst = jnp.where(is_prog, m.next_dest, next_dst)
+        out_val = isa.streaming_result(m.opcode, values, m.value)
+        new_msg = Message(opcode=jnp.where(strm, next_op, isa.NOP),
+                          dest=next_dst, value=out_val,
+                          next_opcode=jnp.zeros_like(next_op),
+                          next_dest=jnp.zeros_like(next_dst))
+        # A streaming emission overwrites any pending emission slot (conflict
+        # counted by caller via emitted collision check).
+        emitted = _select_msg(strm, new_msg, emitted)
+        return values, next_op, next_dst, emitted, strm
+
+    values, next_op, next_dst, emitted, t_strm = apply_local(
+        values, next_op, next_dst, emitted, from_top, t_local)
+    values, next_op, next_dst, emitted, l_strm = apply_local(
+        values, next_op, next_dst, emitted, from_left, l_local)
+
+    e_live = emitted.is_live()
+    e_down = e_live & _route_is_down(emitted.dest, rows, cols, my_row)
+    e_right = e_live & ~e_down
+
+    # ---- 4. drive output wires (priority: emitted > top > left) ----------- #
+    down_out = Message.empty((rows, cols))
+    down_out = _select_msg(l_down, _mask_msg(l_down, from_left), down_out)
+    down_out = _select_msg(t_down, _mask_msg(t_down, from_top), down_out)
+    down_out = _select_msg(e_down, _mask_msg(e_down, emitted), down_out)
+
+    right_out = Message.empty((rows, cols))
+    right_out = _select_msg(l_right, _mask_msg(l_right, from_left), right_out)
+    right_out = _select_msg(t_right, _mask_msg(t_right, from_top), right_out)
+    right_out = _select_msg(e_right, _mask_msg(e_right, emitted), right_out)
+
+    n_down = (l_down.astype(jnp.int32) + t_down.astype(jnp.int32)
+              + e_down.astype(jnp.int32))
+    n_right = (l_right.astype(jnp.int32) + t_right.astype(jnp.int32)
+               + e_right.astype(jnp.int32))
+    both_strm = (t_strm & l_strm).astype(jnp.int32)
+    conflicts = (state.conflicts
+                 + jnp.sum(jnp.maximum(n_down - 1, 0))
+                 + jnp.sum(jnp.maximum(n_right - 1, 0))
+                 + jnp.sum(both_strm))
+
+    return Fabric(values=values, next_opcode=next_op, next_dest=next_dst,
+                  right=right_out, down=down_out, conflicts=conflicts)
+
+
+def run(state: Fabric, left_seq: Message, top_seq: Message,
+        extra_cycles: int = 0):
+    """Drive the fabric with per-cycle injection schedules via ``lax.scan``.
+
+    ``left_seq``: (T, R) messages for the left edge, ``top_seq``: (T, C) for
+    the top edge.  Runs ``T + extra_cycles`` cycles (idle injection for the
+    drain tail).  Returns (final_state, trace) where ``trace`` holds the
+    ``right``/``down`` wire states after every cycle — the Fig. 5 waveform.
+    """
+    T = left_seq.shape[0]
+    rows, cols = state.shape
+    if extra_cycles:
+        pad_l = Message.empty((extra_cycles, rows))
+        pad_t = Message.empty((extra_cycles, cols))
+        cat = lambda a, b: jnp.concatenate([a, b], axis=0)
+        left_seq = jax.tree.map(cat, left_seq, pad_l)
+        top_seq = jax.tree.map(cat, top_seq, pad_t)
+
+    def body(st, inj):
+        l, t = inj
+        st = step(st, l, t)
+        return st, (st.right, st.down)
+
+    final, trace = jax.lax.scan(body, state, (left_seq, top_seq))
+    return final, trace
+
+
+# --------------------------------------------------------------------------- #
+# Bus mode — the Fig. 3 single-step collectives                               #
+# --------------------------------------------------------------------------- #
+def load_values(state: Fabric, block: jax.Array, row0: int = 0,
+                col0: int = 0) -> Fabric:
+    """Direct (host-side) value load, the fast path equivalent of N hop-load
+    steps.  ``schedule.py`` accounts the paper's step cost separately."""
+    r, c = block.shape
+    values = jax.lax.dynamic_update_slice(
+        state.values, block.astype(jnp.float32), (row0, col0))
+    return dataclasses.replace(state, values=values)
+
+
+def vbus_mul(state: Fabric, vec: jax.Array, cols_slice=None) -> Fabric:
+    """Vertical-bus broadcast multiply: every site in column c multiplies its
+    stored value by ``vec[c]`` (1 time step in the paper's accounting)."""
+    v = jnp.asarray(vec, jnp.float32)
+    if cols_slice is not None:
+        mask = jnp.zeros(state.shape[1], jnp.float32).at[cols_slice].set(1.0)
+        v = jnp.where(mask > 0, v, 1.0)
+    return dataclasses.replace(state, values=state.values * v[None, :])
+
+
+def hbus_reduce_rows(state: Fabric, ncols: int | None = None) -> jax.Array:
+    """Horizontal-bus reduction: each row streams its products to the adder
+    site; returns the per-row sums (1 time step in the paper's accounting)."""
+    vals = state.values if ncols is None else state.values[:, :ncols]
+    return jnp.sum(vals, axis=1)

@@ -1,0 +1,183 @@
+"""Instruction-set architecture of the messaging-based programmable fabric.
+
+Implements the 64-bit message encoding of Fig. 1B and the 10-instruction ISA of
+Fig. 1C, bit-exact against the Fig. 5 waveform hex values:
+
+    bits  0-3   opcode
+    bits  4-15  destination address (12 bits -> up to 4096 sites)
+    bits 16-47  value (IEEE-754 binary32)
+    bits 48-51  next opcode
+    bits 52-63  next destination
+
+Confirmed codes (decoded from the paper's Fig. 5 message hex): Prog=1, A_ADD=4,
+A_ADDS=7.  The remaining assignments are our documented inference (DESIGN.md §1).
+
+Messages are represented as a struct-of-arrays :class:`Message` of narrow integer
+fields so the simulator can hold one message per port per site without 64-bit
+integer support; :func:`pack`/:func:`unpack` convert to the wire format (a pair of
+uint32 words, or a python int / hex string for test vectors).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# --------------------------------------------------------------------------- #
+# Opcodes (Fig. 1C).  Prog=1 / A_ADD=4 / A_ADDS=7 are verified against Fig. 5. #
+# --------------------------------------------------------------------------- #
+NOP = 0        # absence of a message (not part of the paper's 10; wire-level idle)
+PROG = 1       # program a site: value + next_opcode/next_dest registers
+UPDATE = 2     # overwrite the stored value
+A_DIV = 3      # stored <- stored / msg
+A_ADD = 4      # stored <- stored + msg          (terminal; verified =4)
+A_SUB = 5      # stored <- stored - msg
+A_MUL = 6      # stored <- stored * msg
+A_ADDS = 7     # emit msg + stored               (streaming; verified =7)
+A_SUBS = 8     # emit msg - stored
+A_MULS = 9     # emit msg * stored
+A_DIVS = 10    # emit msg / stored
+
+OPCODE_NAMES = {
+    NOP: "NOP", PROG: "Prog", UPDATE: "UPDATE", A_DIV: "A_DIV", A_ADD: "A_ADD",
+    A_SUB: "A_SUB", A_MUL: "A_MUL", A_ADDS: "A_ADDS", A_SUBS: "A_SUBS",
+    A_MULS: "A_MULS", A_DIVS: "A_DIVS",
+}
+OPCODES_BY_NAME = {v: k for k, v in OPCODE_NAMES.items()}
+
+#: opcodes that terminate at the destination site (absorb the message)
+TERMINAL_OPS = (PROG, UPDATE, A_DIV, A_ADD, A_SUB, A_MUL)
+#: opcodes that compute with the stored value and re-emit a message
+STREAMING_OPS = (A_ADDS, A_SUBS, A_MULS, A_DIVS)
+
+ADDR_BITS = 12
+MAX_SITES = 1 << ADDR_BITS  # 4096 — exactly the paper's evaluated fabric size
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Message:
+    """Struct-of-arrays message bundle. All fields share a leading shape.
+
+    ``opcode == NOP`` marks an empty slot (no message on the wire).
+    """
+
+    opcode: jax.Array     # int32
+    dest: jax.Array       # int32 (12-bit address)
+    value: jax.Array      # float32
+    next_opcode: jax.Array  # int32
+    next_dest: jax.Array    # int32
+
+    @staticmethod
+    def make(opcode, dest, value, next_opcode=NOP, next_dest=0) -> "Message":
+        b = jnp.broadcast_shapes(
+            jnp.shape(opcode), jnp.shape(dest), jnp.shape(value),
+            jnp.shape(next_opcode), jnp.shape(next_dest))
+        i32 = lambda x: jnp.broadcast_to(jnp.asarray(x, jnp.int32), b)
+        return Message(
+            opcode=i32(opcode), dest=i32(dest),
+            value=jnp.broadcast_to(jnp.asarray(value, jnp.float32), b),
+            next_opcode=i32(next_opcode), next_dest=i32(next_dest))
+
+    @staticmethod
+    def empty(shape=()) -> "Message":
+        return Message.make(jnp.zeros(shape, jnp.int32), 0, 0.0, NOP, 0)
+
+    @property
+    def shape(self):
+        return self.opcode.shape
+
+    def is_live(self) -> jax.Array:
+        return self.opcode != NOP
+
+
+# --------------------------------------------------------------------------- #
+# Wire format                                                                  #
+# --------------------------------------------------------------------------- #
+def _f32_bits(value: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(
+        jnp.asarray(value, jnp.float32), jnp.uint32)
+
+
+def _bits_f32(bits: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(
+        jnp.asarray(bits, jnp.uint32), jnp.float32)
+
+
+def pack(msg: Message) -> tuple[jax.Array, jax.Array]:
+    """Pack to (lo, hi) uint32 words: lo = bits 0..31, hi = bits 32..63."""
+    op = jnp.asarray(msg.opcode, jnp.uint32) & 0xF
+    dest = jnp.asarray(msg.dest, jnp.uint32) & 0xFFF
+    val = _f32_bits(msg.value)
+    nop = jnp.asarray(msg.next_opcode, jnp.uint32) & 0xF
+    ndst = jnp.asarray(msg.next_dest, jnp.uint32) & 0xFFF
+    lo = op | (dest << 4) | ((val & 0xFFFF) << 16)
+    hi = (val >> 16) | (nop << 16) | (ndst << 20)
+    return lo, hi
+
+
+def unpack(lo: jax.Array, hi: jax.Array) -> Message:
+    lo = jnp.asarray(lo, jnp.uint32)
+    hi = jnp.asarray(hi, jnp.uint32)
+    op = (lo & 0xF).astype(jnp.int32)
+    dest = ((lo >> 4) & 0xFFF).astype(jnp.int32)
+    val_bits = (lo >> 16) | ((hi & 0xFFFF) << 16)
+    nop = ((hi >> 16) & 0xF).astype(jnp.int32)
+    ndst = ((hi >> 20) & 0xFFF).astype(jnp.int32)
+    return Message(opcode=op, dest=dest, value=_bits_f32(val_bits),
+                   next_opcode=nop, next_dest=ndst)
+
+
+def pack_word(msg: Message) -> int:
+    """Pack a scalar Message into a python int (the 64-bit wire word)."""
+    lo, hi = pack(msg)
+    return int(np.asarray(lo)) | (int(np.asarray(hi)) << 32)
+
+
+def unpack_word(word: int) -> Message:
+    return unpack(np.uint32(word & 0xFFFFFFFF), np.uint32(word >> 32))
+
+
+def to_hex(msg: Message) -> str:
+    """Wire word as the 16-hex-digit string used in the paper's Fig. 5 table."""
+    return f"{pack_word(msg):016x}"
+
+
+def from_hex(s: str) -> Message:
+    return unpack_word(int(s, 16))
+
+
+def describe(msg: Message) -> str:
+    """Human-readable rendering matching the Fig. 5 table columns."""
+    return (f"{OPCODE_NAMES.get(int(msg.opcode), '?')} dest={int(msg.dest)} "
+            f"value={float(msg.value):g} "
+            f"next={OPCODE_NAMES.get(int(msg.next_opcode), '?')} "
+            f"next_dest={int(msg.next_dest)}")
+
+
+# --------------------------------------------------------------------------- #
+# ALU semantics shared by the simulator (vectorized over sites)               #
+# --------------------------------------------------------------------------- #
+def terminal_result(opcode: jax.Array, stored: jax.Array,
+                    incoming: jax.Array) -> jax.Array:
+    """New stored value after a terminal op lands (vectorized)."""
+    return jnp.select(
+        [opcode == PROG, opcode == UPDATE, opcode == A_ADD, opcode == A_SUB,
+         opcode == A_MUL, opcode == A_DIV],
+        [incoming, incoming, stored + incoming, stored - incoming,
+         stored * incoming, stored / incoming],
+        default=stored)
+
+
+def streaming_result(opcode: jax.Array, stored: jax.Array,
+                     incoming: jax.Array) -> jax.Array:
+    """Value re-emitted by a streaming (``*S``) op (vectorized)."""
+    return jnp.select(
+        [opcode == A_ADDS, opcode == A_SUBS, opcode == A_MULS,
+         opcode == A_DIVS],
+        [incoming + stored, incoming - stored, incoming * stored,
+         incoming / stored],
+        default=incoming)

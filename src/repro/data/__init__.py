@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataIterator, input_specs, make_batch
+
+__all__ = ["DataIterator", "input_specs", "make_batch"]

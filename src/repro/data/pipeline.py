@@ -1,0 +1,103 @@
+"""Deterministic synthetic data pipeline + the input-spec registry.
+
+Two jobs:
+
+1. ``make_batch`` / ``DataIterator`` — host-sharded, deterministically
+   seeded synthetic batches for every family (tokens; frame embeddings for
+   the audio stub; patch embeddings for the vlm stub).  The iterator state
+   is one integer (``step``) and lives inside checkpoints, so restarts
+   resume the exact stream (fault-tolerance contract).
+
+2. ``input_specs`` — ``jax.ShapeDtypeStruct`` stand-ins for every
+   (arch x shape) cell, consumed by the dry-run (never allocated).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig, SHAPES
+
+
+def batch_shapes(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Logical input shapes for a cell (decode excludes the cache)."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        if cfg.embed_input:
+            return {"tokens": ((B, 1), jnp.int32)}
+        return {"embeds": ((B, 1, cfg.d_model), jnp.bfloat16)}
+    out: dict = {}
+    if cfg.embed_input:
+        out["tokens"] = ((B, S), jnp.int32)
+    else:
+        out["embeds"] = ((B, S, cfg.d_model), jnp.bfloat16)
+        if shape.kind == "train":
+            out["labels"] = ((B, S), jnp.int32)
+    if cfg.family == "vlm":
+        out["vision_embeds"] = ((B, cfg.n_vision_tokens, cfg.vision_dim),
+                                jnp.bfloat16)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig | str) -> dict:
+    """ShapeDtypeStruct tree for the dry-run (weak-type-correct, shardable,
+    zero allocation)."""
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    return {k: jax.ShapeDtypeStruct(s, d)
+            for k, (s, d) in batch_shapes(cfg, shape).items()}
+
+
+def make_batch(cfg: ModelConfig, shape: ShapeConfig | str, step: int,
+               host_id: int = 0, n_hosts: int = 1) -> dict:
+    """Concrete synthetic batch for this host's slice of the global batch.
+    Content depends only on (step, global example index) — any host count
+    yields the same global batch (elastic-safe determinism)."""
+    if isinstance(shape, str):
+        shape = SHAPES[shape]
+    B = shape.global_batch
+    assert B % n_hosts == 0, (B, n_hosts)
+    b = B // n_hosts
+    lo = host_id * b
+    out = {}
+    for name, (gshape, dtype) in batch_shapes(cfg, shape).items():
+        lshape = (b,) + tuple(gshape[1:])
+        rows = []
+        for i in range(b):
+            rng = np.random.default_rng(
+                (step * B + lo + i) * 1000003 + hash(name) % 997)
+            if dtype == jnp.int32:
+                rows.append(rng.integers(0, cfg.vocab_size, size=gshape[1:],
+                                         dtype=np.int32))
+            else:
+                rows.append(rng.normal(size=gshape[1:]).astype(np.float32))
+        arr = np.stack(rows) if b else np.zeros(lshape)
+        out[name] = jnp.asarray(arr.astype(
+            np.int32 if dtype == jnp.int32 else np.float32))
+    return out
+
+
+@dataclasses.dataclass
+class DataIterator:
+    """Checkpointable iterator: ``state`` is just the step counter."""
+
+    cfg: ModelConfig
+    shape: ShapeConfig
+    host_id: int = 0
+    n_hosts: int = 1
+    step: int = 0
+
+    def __next__(self):
+        batch = make_batch(self.cfg, self.shape, self.step, self.host_id,
+                           self.n_hosts)
+        self.step += 1
+        return batch
+
+    def state(self) -> dict:
+        return {"step": self.step}
+
+    def restore(self, state: dict) -> None:
+        self.step = int(state["step"])

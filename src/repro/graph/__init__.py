@@ -1,0 +1,12 @@
+from repro.graph.generators import (barabasi_albert, erdos_renyi,
+                                    protein_network)
+from repro.graph.transition import (build_transition_dense,
+                                    build_transition_ell,
+                                    build_transition_bsr, dangling_fix)
+from repro.graph.sparse import CSRMatrix, ELLMatrix, BSRMatrix
+
+__all__ = [
+    "barabasi_albert", "erdos_renyi", "protein_network",
+    "build_transition_dense", "build_transition_ell", "build_transition_bsr",
+    "dangling_fix", "CSRMatrix", "ELLMatrix", "BSRMatrix",
+]

@@ -1,0 +1,49 @@
+"""Public jit'd entry points for the kernel layer.
+
+``interpret`` defaults to True because this container is CPU-only; on real
+TPU hardware set ``REPRO_PALLAS_INTERPRET=0`` (or pass ``interpret=False``)
+and the same ``pallas_call`` lowers to Mosaic.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.graph.sparse import BSRMatrix
+from repro.kernels.bsr_spmv import bsr_spmv
+from repro.kernels.pagerank_step import pagerank_step
+from repro.kernels.streaming_matvec import streaming_matvec
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def matvec(W: jax.Array, x: jax.Array, **kw) -> jax.Array:
+    """y = W @ x via the streaming kernel (paper's MV, B=1)."""
+    kw.setdefault("interpret", INTERPRET)
+    return streaming_matvec(W, x[None, :], **kw)[0]
+
+
+def gemv_batched(W: jax.Array, X: jax.Array, **kw) -> jax.Array:
+    """Y = X @ W^T — the decode-path batched GEMV."""
+    kw.setdefault("interpret", INTERPRET)
+    return streaming_matvec(W, X, **kw)
+
+
+def spmv(bsr: BSRMatrix, x: jax.Array, **kw) -> jax.Array:
+    """y = H_bsr @ x, trimmed to the logical (unpadded) length."""
+    kw.setdefault("interpret", INTERPRET)
+    y = bsr_spmv(bsr.blocks, bsr.block_cols, x, **kw)
+    return y[:bsr.shape[0]]
+
+
+def pagerank_iteration(H: jax.Array, pr: jax.Array,
+                       dangling: jax.Array | None = None,
+                       d: float = 0.85, **kw) -> jax.Array:
+    """Fused PageRank step with dangling correction."""
+    kw.setdefault("interpret", INTERPRET)
+    n = H.shape[0]
+    leak = 0.0 if dangling is None else jnp.sum(pr * dangling) / n
+    t = d * leak + (1.0 - d) / n
+    return pagerank_step(H, pr, t, d=d, **kw)

@@ -1,0 +1,73 @@
+"""Fused PageRank iteration kernel: y = d * (H @ x) + t, in one pass.
+
+The paper executes the MV, the scalar-d multiply, and the teleport add as
+*separate* fabric phases (N+3, +1, +1 steps).  On TPU the affine epilogue is
+free ALU work while the final MXU tile drains, so we fuse all three into the
+matvec's last reduction step — removing two full passes over the rank vector
+(the beyond-paper optimization benchmarked in EXPERIMENTS.md §Perf).
+
+``t`` carries the teleport term plus the dangling-leak correction, computed
+by the caller: ``t = d * sum(pr[dangling]) / n + (1 - d) / n`` — a scalar,
+staged through SMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(t_ref, h_ref, x_ref, y_ref, *, d: float, m_steps: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    y_ref[...] += jax.lax.dot_general(
+        x_ref[...], h_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == m_steps - 1)
+    def _epilogue():
+        y_ref[...] = jnp.float32(d) * y_ref[...] + t_ref[0]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("d", "block_n", "block_m", "interpret"))
+def pagerank_step(H: jax.Array, pr: jax.Array, t: jax.Array, *,
+                  d: float = 0.85, block_n: int = 256, block_m: int = 256,
+                  interpret: bool = True) -> jax.Array:
+    """One fused iteration: returns d * (H @ pr) + t.  H: (N, N), pr: (N,)."""
+    N, M = H.shape
+    bn = min(block_n, _mult(N, 128))
+    bm = min(block_m, _mult(M, 128))
+    Np, Mp = _mult(N, bn), _mult(M, bm)
+    Hp = jnp.pad(H, ((0, Np - N), (0, Mp - M)))
+    xp = jnp.pad(pr, (0, Mp - M))[None, :]          # (1, Mp)
+    grid = (Np // bn, Mp // bm)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bm), lambda i, j, t: (i, j)),
+            pl.BlockSpec((1, bm), lambda i, j, t: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda i, j, t: (0, i)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_kernel, d=d, m_steps=grid[1]),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, Np), jnp.float32),
+        interpret=interpret,
+    )(jnp.asarray(t, jnp.float32).reshape(1), Hp, xp)
+    return out[0, :N]
+
+
+def _mult(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function is the mathematical definition the kernels must match to
+``assert_allclose`` across the shape/dtype sweeps in
+``tests/test_kernels.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def streaming_matvec_ref(W: jax.Array, X: jax.Array) -> jax.Array:
+    """Y = X @ W^T, f32 accumulation."""
+    return jnp.dot(X.astype(jnp.float32), W.astype(jnp.float32).T)
+
+
+def bsr_spmv_ref(blocks: jax.Array, block_cols: jax.Array,
+                 x: jax.Array) -> jax.Array:
+    """BSR matvec: zero-padded blocks contribute nothing."""
+    nb_r, mb, bs, _ = blocks.shape
+    xp = x
+    if x.shape[0] % bs:
+        xp = jnp.pad(x, (0, bs - x.shape[0] % bs))
+    xb = xp.reshape(-1, bs)
+    gathered = xb[block_cols]                    # (nb_r, mb, bs)
+    y = jnp.einsum("rbij,rbj->ri", blocks.astype(jnp.float32),
+                   gathered.astype(jnp.float32))
+    return y.reshape(nb_r * bs)
+
+
+def pagerank_step_ref(H: jax.Array, pr: jax.Array, t: jax.Array,
+                      d: float = 0.85) -> jax.Array:
+    return d * jnp.dot(H.astype(jnp.float32), pr.astype(jnp.float32)) + t

@@ -1,0 +1,398 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell on the production mesh, prove it fits, and extract the roofline terms.
+
+The two lines above MUST stay the first statements in this file — jax locks
+the device count on first init (see the assignment's dry-run contract).
+
+Per cell this script:
+  1. builds the production mesh (16x16 single-pod / 2x16x16 multi-pod);
+  2. builds ``jax.ShapeDtypeStruct`` stand-ins for params, optimizer state,
+     cache and batch (ZERO device allocation — 90B-param models "fit");
+  3. jits the production step (train_step / prefill / decode_step) with
+     explicit in/out shardings from the logical-axis rules;
+  4. ``.lower().compile()`` — any sharding mismatch, unsupported collective
+     or compile-time OOM fails the cell;
+  5. records ``memory_analysis()`` / ``cost_analysis()`` / per-collective
+     wire bytes (parsed from the partitioned HLO) into a JSON artifact that
+     ``benchmarks/roofline.py`` consumes.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3-8b --shape train_4k
+    python -m repro.launch.dryrun --arch all --mesh pod,multipod
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_IDS, SHAPES, applicable_shapes, get_config)
+from repro.data.pipeline import input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.sharding import partition as P_
+from repro.train.optimizer import OptimizerConfig, OptState
+from repro.train.train_step import train_step
+
+_COLLECTIVE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*=\s*([^\s]+)\(")
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64|f64)"
+                       r"\[([\d,]*)\]")
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "s64": 8, "u64": 8, "f64": 8}
+# per-device wire-byte multiplier (ring algorithms)
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of an HLO type string (may be a tuple type)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_computations(hlo_text: str) -> dict[str, list[str]]:
+    """Split partitioned HLO text into named computations."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo_text.splitlines():
+        m = re.match(r"^(%[\w.\-]+|ENTRY\s+%?[\w.\-]+)\s*\(.*\)\s*->", line)
+        if m:
+            cur = m.group(1).lstrip("% ").replace("ENTRY ", "")
+            comps[cur] = []
+        elif cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def trip_multipliers(hlo_text: str,
+                     comps: dict[str, list[str]]) -> dict[str, float]:
+    """Effective execution count per computation.
+
+    XLA cost analysis counts each while body ONCE (verified empirically —
+    EXPERIMENTS.md §Dry-run caveats), so we recover trip counts from each
+    while's condition computation (the loop-bound ``constant(N)`` feeding its
+    compare) and propagate multipliers down the while-nesting call graph.
+    """
+    # which computation contains each while op, and its body/cond names
+    contains: dict[str, list[tuple[str, str]]] = {}
+    for name, lines in comps.items():
+        for ln in lines:
+            m = re.search(r"while\(.*?\)(?:.*?)condition=%?([\w.\-]+),\s*"
+                          r"body=%?([\w.\-]+)", ln)
+            if m:
+                contains.setdefault(name, []).append(
+                    (m.group(2), m.group(1)))
+
+    def cond_trip(cond_name: str) -> int:
+        best = 1
+        for ln in comps.get(cond_name, []):
+            m = re.search(r"constant\((\d+)\)", ln)
+            if m:
+                best = max(best, int(m.group(1)))
+        return best
+
+    mult: dict[str, float] = {name: 1.0 for name in comps}
+
+    # iterate to fixpoint over the (acyclic) while-nesting graph
+    for _ in range(8):
+        changed = False
+        for parent, children in contains.items():
+            for body, cond in children:
+                new = mult.get(parent, 1.0) * cond_trip(cond)
+                if body in mult and abs(mult[body] - new) > 1e-9:
+                    mult[body] = new
+                    changed = True
+        if not changed:
+            break
+    return mult
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Trip-weighted per-device wire bytes of every collective."""
+    comps = parse_computations(hlo_text)
+    mult = trip_multipliers(hlo_text, comps)
+    out: dict[str, dict] = {}
+    for name, lines in comps.items():
+        w = mult.get(name, 1.0)
+        for line in lines:
+            line = line.strip()
+            m = re.match(r"(?:ROOT\s+)?%?[\w.-]+\s*=\s*(\([^)]*\)|[^\s]+)\s+"
+                         r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                         r"collective-permute)(?:-start)?(?:\.\d+)?\(", line)
+            if not m:
+                continue
+            type_str, op = m.group(1), m.group(2)
+            b = _shape_bytes(type_str)
+            rec = out.setdefault(op, {"count": 0, "bytes": 0,
+                                      "wire_bytes": 0})
+            rec["count"] += 1
+            rec["bytes"] += int(b * w)
+            rec["wire_bytes"] += int(b * w * _WIRE_FACTOR[op])
+    return out
+
+
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*"
+                       r"(\([^)]*\)|[^\s]+)\s+(\w[\w\-]*)\(")
+
+
+def _first_dims(type_str: str) -> tuple[list[int], int]:
+    """(dims, dtype_bytes) of the first array in an HLO type string."""
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return [], 4
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return dims, _DTYPE_BYTES[m.group(1)]
+
+
+def dot_stats(hlo_text: str) -> dict:
+    """Trip-weighted FLOPs and operand/result bytes of every dot — the
+    while-corrected compute/memory numbers cost_analysis cannot give."""
+    comps = parse_computations(hlo_text)
+    mult = trip_multipliers(hlo_text, comps)
+    total_flops = 0.0
+    total_bytes = 0.0
+    n_dots = 0
+    for name, lines in comps.items():
+        w = mult.get(name, 1.0)
+        types: dict[str, str] = {}
+        for ln in lines:
+            mm = _INSTR_RE.match(ln.strip())
+            if mm:
+                types[mm.group(1)] = mm.group(2)
+        for ln in lines:
+            ln = ln.strip()
+            mm = _INSTR_RE.match(ln)
+            if not mm or mm.group(3) != "dot":
+                continue
+            out_dims, out_b = _first_dims(mm.group(2))
+            ops = re.search(r"dot\(%([\w.\-]+),\s*%([\w.\-]+)\)", ln)
+            lc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ln)
+            flops = 2.0
+            for d in out_dims:
+                flops *= d
+            bytes_ = 1
+            for d in out_dims:
+                bytes_ *= d
+            bytes_ *= out_b
+            if ops and lc is not None:
+                lhs_type = types.get(ops.group(1), "")
+                lhs_dims, lhs_b = _first_dims(lhs_type)
+                rhs_dims, rhs_b = _first_dims(types.get(ops.group(2), ""))
+                for ci in (lc.group(1).split(",") if lc.group(1) else []):
+                    if int(ci) < len(lhs_dims):
+                        flops *= lhs_dims[int(ci)]
+                lb = lhs_b
+                for d in lhs_dims:
+                    lb *= d
+                rb = rhs_b
+                for d in rhs_dims:
+                    rb *= d
+                bytes_ += lb + rb
+            total_flops += w * flops
+            total_bytes += w * bytes_
+            n_dots += 1
+    return {"dot_flops": total_flops, "dot_bytes": total_bytes,
+            "n_dots": n_dots}
+
+
+def _sharded_specs(tree, logical, mesh, rules=None):
+    """ShapeDtypeStruct tree with shape-fitted shardings attached."""
+    shardings = P_.fitted_shardings(tree, logical, mesh, rules)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree, shardings)
+
+
+def _batch_logical(batch_specs_tree, cfg):
+    def ax(name, spec):
+        nd = len(spec.shape)
+        return ("batch",) + (None,) * (nd - 1)
+    return {k: ax(k, v) for k, v in batch_specs_tree.items()}
+
+
+def build_cell(arch: str, shape_name: str, mesh, remat: str | None = None):
+    """Returns (fn, abstract_args tuple, out_shardings or None)."""
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if remat:
+        cfg = _dc.replace(cfg, remat_policy=remat)
+    shape = SHAPES[shape_name]
+    rules = (P_.MULTIPOD_RULES if "pod" in mesh.axis_names
+             else P_.DEFAULT_RULES)
+
+    with_rules = rules
+    params_abs = jax.tree.map(          # fp32 master params (training view)
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+        M.abstract_params(cfg))
+    logical = M.param_logical_axes(cfg)
+    batch_abs = input_specs(cfg, shape)
+    batch_logical = _batch_logical(batch_abs, cfg)
+    batch_sharded = _sharded_specs(batch_abs, batch_logical, mesh)
+
+    if shape.kind == "train":
+        params_sharded = _sharded_specs(params_abs, logical, mesh)
+        opt_abs = OptState(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            m=params_abs, v=params_abs, ef={})
+        opt_logical = OptState(step=(), m=logical, v=logical, ef={})
+        opt_sharded = _sharded_specs(opt_abs, opt_logical, mesh)
+        ocfg = OptimizerConfig()
+
+        def fn(params, opt_state, batch):
+            return train_step(params, opt_state, batch, cfg, ocfg)
+
+        return fn, (params_sharded, opt_sharded, batch_sharded), None
+
+    # inference paths: bf16 params, WEIGHT-STATIONARY rules (no FSDP axis;
+    # the paper's matrix-stationary scheme — §Perf iteration 2)
+    inf_rules = (P_.INFERENCE_MULTIPOD_RULES if "pod" in mesh.axis_names
+                 else P_.INFERENCE_RULES)
+    rules = inf_rules
+    params_sharded = _sharded_specs(M.abstract_params(cfg), logical, mesh,
+                                    inf_rules)
+
+    if shape.kind == "prefill":
+        def fn(params, batch):
+            return M.prefill(params, batch, cfg, max_len=shape.seq_len)
+        return fn, (params_sharded, batch_sharded), None
+
+    # decode: cache of seq_len, one new token
+    cache_abs = jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len))
+    cache_logical = M.cache_logical_axes(cfg)
+    cache_sharded = jax.tree.map(
+        lambda s, ax: jax.ShapeDtypeStruct(
+            s.shape, s.dtype,
+            sharding=jax.sharding.NamedSharding(
+                mesh, P_.fitted_pspec(s.shape, ax, rules))),
+        cache_abs, cache_logical,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+    def fn(params, batch, cache):
+        return M.decode_step(params, batch, cache, cfg)
+
+    return fn, (params_sharded, batch_sharded, cache_sharded), None
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: str | None = None, save_hlo: bool = False,
+             remat: str | None = None) -> dict:
+    multi = mesh_kind == "multipod"
+    mesh = make_production_mesh(multi_pod=multi)
+    rules = P_.MULTIPOD_RULES if multi else P_.DEFAULT_RULES
+    t0 = time.time()
+    shape = SHAPES[shape_name]
+    if shape.kind != "train":
+        rules = (P_.INFERENCE_MULTIPOD_RULES if multi
+                 else P_.INFERENCE_RULES)
+    with P_.use_mesh(mesh, rules):
+        fn, args, _ = build_cell(arch, shape_name, mesh, remat=remat)
+        lowered = jax.jit(fn).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        try:
+            mem = compiled.memory_analysis()
+            mem_stats = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            }
+        except Exception as e:                      # backend-dependent
+            mem_stats = {"error": str(e)}
+        try:
+            cost = compiled.cost_analysis()
+            cost_stats = {k: float(v) for k, v in cost.items()
+                          if isinstance(v, (int, float))
+                          and k in ("flops", "bytes accessed",
+                                    "transcendentals", "optimal_seconds")}
+        except Exception as e:
+            cost_stats = {"error": str(e)}
+
+        hlo = compiled.as_text()
+        coll = collective_stats(hlo)
+        dots = dot_stats(hlo)
+
+    cfg = get_config(arch)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "n_devices": mesh.size,
+        "status": "ok",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem_stats, "cost": cost_stats, "collectives": coll,
+        "dots": dots,
+        "param_count": cfg.param_count(),
+        "active_param_count": cfg.active_param_count(),
+        "hlo_lines": hlo.count("\n"),
+    }
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        name = f"{arch}_{shape_name}_{mesh_kind}"
+        with open(os.path.join(out_dir, name + ".json"), "w") as f:
+            json.dump(result, f, indent=1)
+        if save_hlo:
+            with open(os.path.join(out_dir, name + ".hlo.txt"), "w") as f:
+                f.write(hlo)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="pod", help="pod,multipod")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--remat", default=None,
+                    help="override remat policy: full | dots | none")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    meshes = args.mesh.split(",")
+    failures = []
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = (applicable_shapes(cfg) if args.shape == "all"
+                  else args.shape.split(","))
+        for shape_name in shapes:
+            if shape_name not in applicable_shapes(cfg):
+                print(f"SKIP {arch} x {shape_name} (inapplicable)")
+                continue
+            for mesh_kind in meshes:
+                tag = f"{arch} x {shape_name} x {mesh_kind}"
+                try:
+                    r = run_cell(arch, shape_name, mesh_kind, args.out,
+                                 args.save_hlo, remat=args.remat)
+                    peak = r["memory"].get("peak_bytes") or 0
+                    print(f"OK   {tag}: compile={r['compile_s']}s "
+                          f"flops={r['cost'].get('flops', 0):.3e} "
+                          f"peak={peak / 2**30:.2f}GiB")
+                except Exception as e:
+                    failures.append(tag)
+                    print(f"FAIL {tag}: {e}")
+                    traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,104 @@
+"""Training launcher: mesh-aware train loop with checkpoint/resume,
+preemption handling and (optional) injected failures for fault drills.
+
+On this CPU container it runs the smoke configs end-to-end (examples use
+it); on a real pod the same loop runs the full configs — the step function
+is exactly what the dry-run lowers for the production mesh.
+
+Usage:
+    python -m repro.launch.train --arch internlm2-1.8b --smoke \
+        --steps 50 --ckpt-dir /tmp/run1 --ckpt-every 10 [--resume]
+    # fault drill: crash at step 7, then rerun with --resume
+    python -m repro.launch.train ... --fail-at 7
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, get_smoke_config
+from repro.configs.base import ShapeConfig, SHAPES
+from repro.data.pipeline import DataIterator
+from repro.launch.mesh import make_host_mesh
+from repro.models import model as M
+from repro.sharding import partition as P_
+from repro.train import (OptimizerConfig, checkpoint as ckpt,
+                         make_train_state, train_step)
+from repro.train.fault import PreemptionGuard
+
+
+def run(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--fail-at", type=int, default=-1,
+                    help="inject a crash after this step (fault drill)")
+    ap.add_argument("--compression", default="none")
+    ap.add_argument("--log-every", type=int, default=5)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    shape = ShapeConfig("cli", seq_len=args.seq, global_batch=args.batch,
+                        kind="train")
+    ocfg = OptimizerConfig(learning_rate=args.lr,
+                           warmup_steps=max(args.steps // 10, 1),
+                           total_steps=args.steps,
+                           compression=args.compression)
+    mesh = make_host_mesh()
+    guard = PreemptionGuard()
+
+    with P_.use_mesh(mesh if mesh.size > 1 else None):
+        params, opt_state = make_train_state(cfg, jax.random.PRNGKey(0))
+        data = DataIterator(cfg, shape)
+        start_step = 0
+        if args.resume and args.ckpt_dir and ckpt.latest_step(args.ckpt_dir) is not None:
+            tree, start_step, extra = ckpt.restore(
+                args.ckpt_dir, {"params": params, "opt": opt_state})
+            params, opt_state = tree["params"], tree["opt"]
+            data.restore(extra["data"])
+            print(f"resumed from step {start_step}")
+
+        step_fn = jax.jit(lambda p, o, b: train_step(p, o, b, cfg, ocfg,
+                                                     args.accum))
+        metrics = {}
+        t0 = time.time()
+        for step in range(start_step, args.steps):
+            if guard.should_stop:
+                print("preempted -> checkpoint + clean exit")
+                break
+            batch = next(data)
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            if (step + 1) % args.log_every == 0:
+                print(f"step {step + 1}: loss={float(metrics['loss']):.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.3f} "
+                      f"lr={float(metrics['lr']):.2e} "
+                      f"({(time.time() - t0) / (step - start_step + 1):.2f}"
+                      f"s/step)")
+            if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+                ckpt.save(args.ckpt_dir, step + 1,
+                          {"params": params, "opt": opt_state},
+                          extra={"data": data.state(), "arch": args.arch})
+                ckpt.garbage_collect(args.ckpt_dir, keep_last=3)
+            if args.fail_at == step + 1:
+                raise RuntimeError(f"injected failure at step {step + 1}")
+
+        if args.ckpt_dir:
+            ckpt.save(args.ckpt_dir, args.steps,
+                      {"params": params, "opt": opt_state},
+                      extra={"data": data.state(), "arch": args.arch})
+    return {"final_loss": float(metrics.get("loss", np.nan))}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,7 @@
+from repro.models import model
+from repro.models.model import (abstract_params, decode_step, forward,
+                                init_cache, init_params, param_logical_axes,
+                                prefill)
+
+__all__ = ["model", "abstract_params", "decode_step", "forward",
+           "init_cache", "init_params", "param_logical_axes", "prefill"]

@@ -1,0 +1,223 @@
+"""GQA attention: flash-style chunked prefill, cached decode, cross-attention.
+
+Prefill uses an online-softmax scan over KV chunks so the (S x S) score
+matrix is never materialized — 32k-token prefill stays O(S * chunk) in
+memory and XLA fuses each chunk's two matmuls around the running max/sum
+(the standard TPU flash pattern; the Pallas kernel tier is reserved for the
+paper's own MV hot spot per the kernel-scope rule).
+
+Decode consumes a KV cache and is GEMV-shaped — the paper's fabric-MV
+schedule applies (DESIGN.md §2): weights stationary/sharded, one activation
+vector streaming, partials reduced across the head shards by GSPMD.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamSpec, apply_rope
+from repro.sharding.partition import shard
+
+NEG_INF = -1e30
+
+
+def attention_specs(cfg: ModelConfig, cross: bool = False,
+                    kv_dim: int | None = None):
+    d, hd = cfg.d_model, cfg.head_dim
+    kvd = kv_dim or d
+    return {
+        "wq": ParamSpec((d, cfg.n_heads, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((kvd, cfg.n_kv_heads, hd),
+                        ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((kvd, cfg.n_kv_heads, hd),
+                        ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((cfg.n_heads, hd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def _project_qkv(params, x, kv_x, cfg: ModelConfig, positions,
+                 rope: bool = True):
+    dtype = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dtype))
+    k = jnp.einsum("btd,dhk->bthk", kv_x, params["wk"].astype(dtype))
+    v = jnp.einsum("btd,dhk->bthk", kv_x, params["wv"].astype(dtype))
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard(q, ("batch", "act_seq", "act_heads", None))
+    # k/v: shard the kv-head axis only when it divides the model axis
+    # (musicgen/zamba2/olmoe); otherwise keep replicated — the head-TP
+    # repeat in _flash_gqa shards the expanded H axis instead (llama3 etc).
+    kv_ax = "act_heads" if _kv_heads_shardable(k.shape[2]) else None
+    k = shard(k, ("batch", "act_seq", kv_ax, None))
+    v = shard(v, ("batch", "act_seq", kv_ax, None))
+    return q, k, v
+
+
+def _flash_gqa(q, k, v, *, causal: bool, k_chunk: int,
+               q_offset: jax.Array | int = 0):
+    """Online-softmax attention.  q: (B, S, H, hd); k/v: (B, T, K, hd).
+
+    GQA is realized by repeating K -> H kv heads *locally* and sharding the
+    full H axis over ``model`` (Megatron-style head TP).  Sharding the K
+    axis instead (K=8 on a 16-way axis) makes GSPMD pad the kv-head
+    dimension and re-gather every (B,S,K,G,Tc) score/mask tensor in the
+    flash backward — measured at 2.2 TB/device/step on llama3-8b train_4k
+    (EXPERIMENTS.md §Perf iteration 1).  The repeat is a local view; k/v
+    stay replicated across the model axis (they are small: K heads).
+    """
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    if G > 1 and not _kv_heads_shardable(K):
+        # repeat only when K would not divide the model axis (llama3/yi/
+        # granite/internlm2/vlm: K=8 on 16) — for MHA-ish archs
+        # (musicgen/zamba2 K=32, olmoe K=16) sharding K directly avoids the
+        # G-fold kv blow-up (§Perf iteration 6).
+        k = jnp.repeat(k, G, axis=2)          # (B, T, H, hd), local op
+        v = jnp.repeat(v, G, axis=2)
+    if k.shape[2] == H:
+        k = shard(k, ("batch", "act_seq", "act_heads", None))
+        v = shard(v, ("batch", "act_seq", "act_heads", None))
+        return _flash_core(q, k, v, causal=causal, k_chunk=k_chunk,
+                           q_offset=q_offset)
+    # grouped path: K kv heads sharded over model, q heads grouped (K, G)
+    k = shard(k, ("batch", "act_seq", "act_heads", None))
+    v = shard(v, ("batch", "act_seq", "act_heads", None))
+    qg = q.reshape(B, S, K, G, hd)
+    qg = shard(qg, ("batch", "act_seq", "act_heads", None, None))
+    out = _flash_core(qg.reshape(B, S, K * G, hd), k, v, causal=causal,
+                      k_chunk=k_chunk, q_offset=q_offset, group=G)
+    return out
+
+
+def _kv_heads_shardable(K: int) -> bool:
+    from repro.sharding.partition import current_mesh
+    mesh = current_mesh()
+    if mesh is None:
+        return True
+    n_model = dict(zip(mesh.axis_names, mesh.shape.values())).get("model", 1)
+    return K % n_model == 0
+
+
+def _flash_core(q, k, v, *, causal: bool, k_chunk: int,
+                q_offset: jax.Array | int = 0, group: int = 1):
+    """q: (B, S, Hq, hd) where Hq = K*group; k/v: (B, T, K, hd)."""
+    B, S, Hq, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    qf = q.reshape(B, S, K, group, hd).astype(jnp.float32)
+    scale = 1.0 / math.sqrt(hd)
+
+    n_chunks = max(T // k_chunk, 1)
+    kc = jnp.moveaxis(k.reshape(B, n_chunks, T // n_chunks, K, hd), 1, 0)
+    vc = jnp.moveaxis(v.reshape(B, n_chunks, T // n_chunks, K, hd), 1, 0)
+
+    q_pos = q_offset + jnp.arange(S)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        idx, k_blk, v_blk = inputs
+        Tc = k_blk.shape[1]
+        s = jnp.einsum("bskgd,btkd->bskgt", qf,
+                       k_blk.astype(jnp.float32)) * scale
+        if causal:
+            k_pos = idx * Tc + jnp.arange(Tc)
+            mask = q_pos[:, None] >= k_pos[None, :]        # (S, Tc)
+            s = jnp.where(mask[None, :, None, None, :], s, NEG_INF)
+        m_blk = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_blk)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bskgt,btkd->bskgd", p, v_blk.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, S, K, group), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, S, K, group), jnp.float32)
+    acc0 = jnp.zeros((B, S, K, group, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, S, Hq, hd).astype(q.dtype)
+
+
+def self_attention(params, x, cfg: ModelConfig, positions,
+                   k_chunk: int = 1024):
+    """Causal prefill/train path."""
+    q, k, v = _project_qkv(params, x, x, cfg, positions)
+    kc = min(k_chunk, x.shape[1])
+    out = _flash_gqa(q, k, v, causal=True, k_chunk=kc)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return shard(y, ("batch", "act_seq", "act_embed"))
+
+
+def cross_attention(params, x, vision_kv, cfg: ModelConfig,
+                    k_chunk: int = 1024):
+    """VLM cross-attn: queries from text stream, KV from vision embeddings
+    (no RoPE, no causal mask)."""
+    B, S, _ = x.shape
+    pos = jnp.zeros((B, S), jnp.int32)
+    q, _, _ = _project_qkv(params, x, x, cfg, pos, rope=False)
+    dtype = x.dtype
+    k = jnp.einsum("btd,dhk->bthk", vision_kv, params["wk"].astype(dtype))
+    v = jnp.einsum("btd,dhk->bthk", vision_kv, params["wv"].astype(dtype))
+    kc = min(k_chunk, vision_kv.shape[1])
+    out = _flash_gqa(q, k, v, causal=False, k_chunk=kc)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dtype))
+    return shard(y, ("batch", "act_seq", "act_embed"))
+
+
+def prefill_attention(params, x, cfg: ModelConfig, positions,
+                      k_chunk: int = 1024):
+    """Causal attention that also returns (k, v) for cache population."""
+    q, k, v = _project_qkv(params, x, x, cfg, positions)
+    kc = min(k_chunk, x.shape[1])
+    out = _flash_gqa(q, k, v, causal=True, k_chunk=kc)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return shard(y, ("batch", "act_seq", "act_embed")), k, v
+
+
+def decode_attention(params, x, cache_k, cache_v, cache_len,
+                     cfg: ModelConfig):
+    """Single-token decode. x: (B, 1, D); cache_k/v: (B, S_max, K, hd);
+    cache_len: () int32 — current fill. Returns (y, new_k, new_v)."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), cache_len, jnp.int32)
+    q, k_new, v_new = _project_qkv(params, x, x, cfg, positions)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k_new.astype(cache_k.dtype), cache_len, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v_new.astype(cache_v.dtype), cache_len, axis=1)
+
+    S_max, K = cache_k.shape[1], cache_k.shape[2]
+    H, hd = q.shape[2], q.shape[3]
+    G = H // K
+    # Flash-decode sharding: the cache is SEQUENCE-sharded over `model`
+    # (kv_seq rule) and stays put; q/scores/out keep heads REPLICATED so the
+    # only collectives are the tiny softmax/output psums over the T shards.
+    # (Head-TP here instead forces a full gather of the repeated cache —
+    # measured +68 GB/step on llama3-8b decode_32k, §Perf iteration 2.)
+    # GQA stays GROUPED (no K->H repeat): with no head axis sharded there is
+    # no GSPMD padding hazard, and the attention dot reads the K-headed
+    # cache — repeating first tripled the decode memory term
+    # (7.8 -> 24.7 ms on llama3-8b decode_32k, §Perf iteration 5).
+    ck = shard(cache_k, ("batch", "kv_seq", None, None))
+    cv = shard(cache_v, ("batch", "kv_seq", None, None))
+    qg = shard(q.reshape(B, K, G, hd).astype(jnp.float32),
+               ("batch", None, None, None))
+    s = jnp.einsum("bkgd,btkd->bkgt", qg,
+                   ck.astype(jnp.float32)) / math.sqrt(hd)
+    valid = jnp.arange(S_max)[None, :] <= cache_len       # includes new token
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    s = shard(s, ("batch", None, None, "kv_seq"))
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkd->bkgd", p, cv.astype(jnp.float32))
+    out = shard(out.reshape(B, 1, H, hd).astype(x.dtype),
+                ("batch", "act_seq", None, None))
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(x.dtype))
+    return shard(y, ("batch", "act_seq", "act_embed")), cache_k, cache_v

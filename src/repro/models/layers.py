@@ -1,0 +1,151 @@
+"""Shared building blocks: init specs, RMSNorm, RoPE, SwiGLU MLP, embeddings.
+
+Parameter handling convention (whole framework): every layer exposes
+
+* ``<layer>_specs(cfg) -> {name: ParamSpec}``   (shape + logical axes + init)
+* ``<layer>(params, x, ...) -> y``              (pure apply)
+
+``ParamSpec.logical`` feeds ``sharding.partition`` for GSPMD placement, and
+``init_tree`` materializes parameters (used by tests/examples; the dry-run
+only ever builds ``jax.ShapeDtypeStruct`` from the specs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding.partition import shard
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    logical: tuple[str | None, ...]
+    init: str = "normal"        # normal | zeros | ones | scaled
+    scale: float = 1.0
+
+    def initializer(self) -> Callable:
+        if self.init == "zeros":
+            return lambda key, shape, dtype: jnp.zeros(shape, dtype)
+        if self.init == "ones":
+            return lambda key, shape, dtype: jnp.ones(shape, dtype)
+        fan_in = self.shape[0] if self.shape else 1
+        std = self.scale / math.sqrt(max(fan_in, 1))
+        return lambda key, shape, dtype: (
+            jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def init_tree(specs, key: jax.Array, dtype=jnp.float32):
+    """Materialize a (nested) dict of ParamSpec into arrays."""
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = [spec.initializer()(k, spec.shape, dtype)
+            for spec, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_tree(specs, dtype=jnp.float32):
+    """ShapeDtypeStruct tree (for the dry-run: no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype), specs,
+        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def logical_axes_tree(specs):
+    return jax.tree.map(lambda s: s.logical, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def stack_specs(specs, n: int, axis_name: str | None = None):
+    """Prepend a stacking dimension (scan-over-layers parameter layout)."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, (axis_name,) + s.logical,
+                            s.init, s.scale),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# --------------------------------------------------------------------------- #
+# RMSNorm                                                                     #
+# --------------------------------------------------------------------------- #
+def rmsnorm_specs(d: int):
+    return {"scale": ParamSpec((d,), (None,), init="ones")}
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Rotary position embeddings                                                  #
+# --------------------------------------------------------------------------- #
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)                      # (hd/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float) -> jax.Array:
+    """x: (..., S, ..., hd) with positions (..., S) broadcastable on the seq
+    axis -2 from the head axis: expects x (B, S, H, hd), positions (B, S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                   # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                   # (B, S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# SwiGLU MLP                                                                  #
+# --------------------------------------------------------------------------- #
+def mlp_specs(d: int, f: int):
+    return {
+        "wi_gate": ParamSpec((d, f), ("embed", "mlp")),
+        "wi_up": ParamSpec((d, f), ("embed", "mlp")),
+        "wo": ParamSpec((f, d), ("mlp", "embed")),
+    }
+
+
+def mlp(params, x: jax.Array) -> jax.Array:
+    dtype = x.dtype
+    h = jax.nn.silu(x @ params["wi_gate"].astype(dtype)) * (
+        x @ params["wi_up"].astype(dtype))
+    h = shard(h, ("batch", "act_seq", "act_mlp"))
+    return h @ params["wo"].astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# Embedding / LM head                                                         #
+# --------------------------------------------------------------------------- #
+def embedding_specs(vocab_padded: int, d: int):
+    return {"table": ParamSpec((vocab_padded, d), ("vocab", "embed"),
+                               scale=1.0)}
+
+
+def embed(params, tokens: jax.Array, dtype=jnp.bfloat16) -> jax.Array:
+    return params["table"].astype(dtype)[tokens]
+
+
+def lm_head_specs(d: int, vocab_padded: int):
+    return {"kernel": ParamSpec((d, vocab_padded), ("embed", "vocab"))}
+
+
+def lm_head(params, x: jax.Array, vocab: int) -> jax.Array:
+    """Logits in float32 (loss stability), sliced to the true vocab."""
+    logits = x.astype(jnp.float32) @ params["kernel"].astype(jnp.float32)
+    logits = shard(logits, ("batch", "act_seq", "vocab"))
+    if logits.shape[-1] != vocab:
+        logits = logits[..., :vocab]
+    return logits

@@ -1,0 +1,404 @@
+"""Full language-model assembly: parameter tree, train/prefill forward,
+cached single-token decode — for all six architecture families.
+
+Layer stacking uses ``lax.scan`` over parameter stacks (compact HLO — the
+512-device dry-run compiles one block, not ``n_layers`` copies).  Families
+with interleaved heterogeneous blocks scan over *groups*:
+
+* ``vlm``    — groups of (cross_attn_every - 1) self blocks + 1 cross block;
+* ``hybrid`` — groups of ``shared_attn_every`` Mamba2 blocks + one
+               weight-tied shared attention block (zamba2 pattern).
+
+Public entry points (all pure functions of (params, batch)):
+
+* :func:`forward`      — train/prefill logits (+ MoE aux losses)
+* :func:`prefill`      — logits + populated decode cache
+* :func:`decode_step`  — one token for the whole batch, cache update
+* :func:`init_cache`   — abstract or concrete cache for a given batch/len
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import ssm as ssm_mod
+from repro.models import transformer as tfm
+from repro.models.layers import (ParamSpec, abstract_tree, embed,
+                                 embedding_specs, init_tree, lm_head,
+                                 lm_head_specs, logical_axes_tree, rmsnorm,
+                                 rmsnorm_specs, stack_specs)
+from repro.sharding.partition import shard
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32}
+
+
+def activation_dtype(cfg: ModelConfig):
+    return DTYPES[cfg.dtype]
+
+
+# --------------------------------------------------------------------------- #
+# Parameter tree                                                              #
+# --------------------------------------------------------------------------- #
+def n_groups(cfg: ModelConfig) -> tuple[int, int]:
+    """(number of scan groups, self/mamba layers per group)."""
+    if cfg.family == "vlm":
+        g = cfg.n_layers // cfg.cross_attn_every
+        return g, cfg.cross_attn_every - 1
+    if cfg.family == "hybrid":
+        g = cfg.n_layers // cfg.shared_attn_every
+        return g, cfg.shared_attn_every
+    return cfg.n_layers, 1
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    specs: dict[str, Any] = {}
+    if cfg.embed_input:
+        specs["embed"] = embedding_specs(cfg.padded_vocab, cfg.d_model)
+    block = tfm.block_specs(cfg)
+    if cfg.family == "vlm":
+        g, per = n_groups(cfg)
+        specs["layers"] = stack_specs(stack_specs(block, per), g)
+        specs["cross"] = stack_specs(tfm.cross_block_specs(cfg), g)
+        specs["vision_proj"] = ParamSpec((cfg.vision_dim, cfg.d_model),
+                                         (None, "embed"))
+    elif cfg.family == "hybrid":
+        g, per = n_groups(cfg)
+        specs["layers"] = stack_specs(stack_specs(block, per), g)
+        specs["shared"] = tfm.shared_block_specs(cfg)
+    else:
+        specs["layers"] = stack_specs(block, cfg.n_layers)
+    specs["final_ln"] = rmsnorm_specs(cfg.d_model)
+    specs["head"] = lm_head_specs(cfg.d_model, cfg.padded_vocab)
+    return specs
+
+
+def init_params(cfg: ModelConfig, key: jax.Array):
+    return init_tree(param_specs(cfg), key, DTYPES[cfg.dtype])
+
+
+def abstract_params(cfg: ModelConfig):
+    return abstract_tree(param_specs(cfg), DTYPES[cfg.dtype])
+
+
+def param_logical_axes(cfg: ModelConfig):
+    return logical_axes_tree(param_specs(cfg))
+
+
+# --------------------------------------------------------------------------- #
+# Forward (train / prefill-without-cache)                                     #
+# --------------------------------------------------------------------------- #
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    dtype = DTYPES[cfg.dtype]
+    if cfg.embed_input:
+        x = embed(params["embed"], batch["tokens"], dtype)
+        B, S = batch["tokens"].shape
+    else:                                   # audio: stubbed frontend
+        x = batch["embeds"].astype(dtype)
+        B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    return shard(x, ("batch", "act_seq", "act_embed")), positions
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """Returns (logits, aux) — aux carries MoE losses (zeros otherwise)."""
+    x, positions = _embed_inputs(params, batch, cfg)
+    aux = {"aux_loss": jnp.zeros((), jnp.float32),
+           "dropped_frac": jnp.zeros((), jnp.float32)}
+
+    if cfg.family in ("dense", "audio"):
+        def body(h, layer):
+            return tfm.dense_block(layer, h, cfg, positions), None
+        x, _ = jax.lax.scan(tfm.remat_wrap(body, cfg.remat_policy), x,
+                            params["layers"])
+
+    elif cfg.family == "moe":
+        def body(carry, layer):
+            h, acc = carry
+            h, a = tfm.moe_block(layer, h, cfg, positions)
+            return (h, acc + a["aux_loss"]), a["dropped_frac"]
+        (x, aux_sum), dropped = jax.lax.scan(
+            tfm.remat_wrap(body, cfg.remat_policy),
+            (x, jnp.zeros((), jnp.float32)), params["layers"])
+        aux = {"aux_loss": aux_sum, "dropped_frac": jnp.mean(dropped)}
+
+    elif cfg.family == "ssm":
+        def body(h, layer):
+            return tfm.ssm_block(layer, h, cfg), None
+        x, _ = jax.lax.scan(tfm.remat_wrap(body, cfg.remat_policy), x,
+                            params["layers"])
+
+    elif cfg.family == "hybrid":
+        x0 = x
+
+        def group(h, group_layers):
+            def inner(hh, layer):
+                return tfm.ssm_block(layer, hh, cfg), None
+            h, _ = jax.lax.scan(inner, h, group_layers)
+            h = tfm.shared_block(params["shared"], h, x0, cfg, positions)
+            return h, None
+        x, _ = jax.lax.scan(tfm.remat_wrap(group, cfg.remat_policy), x,
+                            params["layers"])
+
+    elif cfg.family == "vlm":
+        dtype = DTYPES[cfg.dtype]
+        vision_kv = batch["vision_embeds"].astype(dtype) @ \
+            params["vision_proj"].astype(dtype)
+        vision_kv = shard(vision_kv, ("batch", "vision_seq", "act_embed"))
+
+        def group(h, layers):
+            self_layers, cross_layer = layers
+
+            def inner(hh, layer):
+                return tfm.dense_block(layer, hh, cfg, positions), None
+            h, _ = jax.lax.scan(inner, h, self_layers)
+            h = tfm.cross_block(cross_layer, h, vision_kv, cfg)
+            return h, None
+        x, _ = jax.lax.scan(tfm.remat_wrap(group, cfg.remat_policy), x,
+                            (params["layers"], params["cross"]))
+    else:
+        raise ValueError(cfg.family)
+
+    x = rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    logits = lm_head(params["head"], x, cfg.vocab_size)
+    return logits, aux
+
+
+# --------------------------------------------------------------------------- #
+# Decode cache                                                                #
+# --------------------------------------------------------------------------- #
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None) -> dict:
+    dtype = dtype or DTYPES[cfg.dtype]
+    kvd = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    cache: dict[str, Any] = {"len": jnp.zeros((), jnp.int32)}
+    g, per = n_groups(cfg)
+    if cfg.family in ("dense", "moe", "audio"):
+        cache["k"] = jnp.zeros((cfg.n_layers,) + kvd, dtype)
+        cache["v"] = jnp.zeros((cfg.n_layers,) + kvd, dtype)
+    elif cfg.family == "ssm":
+        s, c = ssm_mod.ssm_decode_init(cfg, batch)
+        cache["ssm"] = jnp.zeros((cfg.n_layers,) + s.shape, jnp.float32)
+        cache["conv"] = jnp.zeros((cfg.n_layers,) + c.shape, jnp.float32)
+    elif cfg.family == "hybrid":
+        s, c = ssm_mod.ssm_decode_init(cfg, batch)
+        cache["ssm"] = jnp.zeros((g, per) + s.shape, jnp.float32)
+        cache["conv"] = jnp.zeros((g, per) + c.shape, jnp.float32)
+        cache["k"] = jnp.zeros((g,) + kvd, dtype)
+        cache["v"] = jnp.zeros((g,) + kvd, dtype)
+    elif cfg.family == "vlm":
+        cache["k"] = jnp.zeros((g, per) + kvd, dtype)
+        cache["v"] = jnp.zeros((g, per) + kvd, dtype)
+        vdim = (batch, cfg.n_vision_tokens, cfg.n_kv_heads, cfg.head_dim)
+        cache["cross_k"] = jnp.zeros((g,) + vdim, dtype)
+        cache["cross_v"] = jnp.zeros((g,) + vdim, dtype)
+    return cache
+
+
+def cache_logical_axes(cfg: ModelConfig) -> dict:
+    """Logical sharding for the cache (batch over data, kv heads over model)."""
+    ax: dict[str, Any] = {"len": ()}
+    kv = (None, "batch", "kv_seq", "kv_heads", None)
+    if cfg.family in ("dense", "moe", "audio"):
+        ax["k"] = kv
+        ax["v"] = kv
+    elif cfg.family == "ssm":
+        ax["ssm"] = (None, "batch", "ssm_heads", None, None)
+        ax["conv"] = (None, "batch", None, "ssm_inner")
+    elif cfg.family == "hybrid":
+        ax["ssm"] = (None, None, "batch", "ssm_heads", None, None)
+        ax["conv"] = (None, None, "batch", None, "ssm_inner")
+        ax["k"] = kv
+        ax["v"] = kv
+    elif cfg.family == "vlm":
+        ax["k"] = (None,) + kv
+        ax["v"] = (None,) + kv
+        ax["cross_k"] = (None, "batch", "vision_seq", "kv_heads", None)
+        ax["cross_v"] = (None, "batch", "vision_seq", "kv_heads", None)
+    return ax
+
+
+# --------------------------------------------------------------------------- #
+# Prefill (populate cache) and decode                                         #
+# --------------------------------------------------------------------------- #
+def prefill(params, batch, cfg: ModelConfig, max_len: int):
+    """Run the prompt, return (last-position logits, populated cache)."""
+    x, positions = _embed_inputs(params, batch, cfg)
+    B, S = positions.shape
+    dtype = DTYPES[cfg.dtype]
+    cache = init_cache(cfg, B, max_len, dtype)
+
+    def pad_kv(k):
+        return jnp.pad(k, ((0, 0), (0, max_len - S), (0, 0), (0, 0)))
+
+    if cfg.family in ("dense", "moe", "audio"):
+        def body(h, layer):
+            y, k, v = attn_mod.prefill_attention(
+                layer["attn"], rmsnorm(layer["ln1"], h, cfg.norm_eps),
+                cfg, positions)
+            h = h + y
+            if cfg.family == "moe":
+                y2, _ = tfm.moe_mod.moe(
+                    layer["moe"], rmsnorm(layer["ln2"], h, cfg.norm_eps), cfg)
+            else:
+                y2 = tfm.mlp(layer["mlp"],
+                             rmsnorm(layer["ln2"], h, cfg.norm_eps))
+            return h + y2, (pad_kv(k.astype(dtype)), pad_kv(v.astype(dtype)))
+        x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+        cache["k"], cache["v"] = ks, vs
+
+    elif cfg.family == "ssm":
+        def body(h, layer):
+            y, st = ssm_mod.ssm_prefill(
+                layer["ssm"], rmsnorm(layer["ln1"], h, cfg.norm_eps), cfg)
+            return h + y, st
+        x, (ssm_states, conv_states) = jax.lax.scan(body, x,
+                                                    params["layers"])
+        cache["ssm"], cache["conv"] = ssm_states, conv_states
+
+    elif cfg.family == "hybrid":
+        x0 = x
+
+        def group(h, group_layers):
+            def inner(hh, layer):
+                y, st = ssm_mod.ssm_prefill(
+                    layer["ssm"], rmsnorm(layer["ln1"], hh, cfg.norm_eps),
+                    cfg)
+                return hh + y, st
+            h, states = jax.lax.scan(inner, h, group_layers)
+            # shared block with its own KV cache entry
+            cat = jnp.concatenate([h, x0], axis=-1)
+            hh = cat @ params["shared"]["in_proj"].astype(h.dtype)
+            y, k, v = attn_mod.prefill_attention(
+                params["shared"]["attn"],
+                rmsnorm(params["shared"]["ln1"], hh, cfg.norm_eps),
+                cfg, positions)
+            hh = hh + y
+            hh = hh + tfm.mlp(params["shared"]["mlp"],
+                              rmsnorm(params["shared"]["ln2"], hh,
+                                      cfg.norm_eps))
+            h = h + jnp.tanh(params["shared"]["gate"].astype(h.dtype)) * hh
+            return h, (states, pad_kv(k.astype(dtype)),
+                       pad_kv(v.astype(dtype)))
+        x, (states, ks, vs) = jax.lax.scan(group, x, params["layers"])
+        cache["ssm"], cache["conv"] = states
+        cache["k"], cache["v"] = ks, vs
+
+    elif cfg.family == "vlm":
+        vision_kv = batch["vision_embeds"].astype(dtype) @ \
+            params["vision_proj"].astype(dtype)
+
+        def group(h, layers):
+            self_layers, cross_layer = layers
+
+            def inner(hh, layer):
+                y, k, v = attn_mod.prefill_attention(
+                    layer["attn"], rmsnorm(layer["ln1"], hh, cfg.norm_eps),
+                    cfg, positions)
+                hh = hh + y
+                hh = hh + tfm.mlp(layer["mlp"],
+                                  rmsnorm(layer["ln2"], hh, cfg.norm_eps))
+                return hh, (pad_kv(k.astype(dtype)), pad_kv(v.astype(dtype)))
+            h, (ks, vs) = jax.lax.scan(inner, h, self_layers)
+            # cross block: also emit the (static) vision KV for this group
+            ck = jnp.einsum("btd,dhk->bthk", vision_kv,
+                            cross_layer["attn"]["wk"].astype(dtype))
+            cv = jnp.einsum("btd,dhk->bthk", vision_kv,
+                            cross_layer["attn"]["wv"].astype(dtype))
+            h = tfm.cross_block(cross_layer, h, vision_kv, cfg)
+            return h, (ks, vs, ck.astype(dtype), cv.astype(dtype))
+        x, (ks, vs, cks, cvs) = jax.lax.scan(
+            group, x, (params["layers"], params["cross"]))
+        cache["k"], cache["v"] = ks, vs
+        cache["cross_k"], cache["cross_v"] = cks, cvs
+    else:
+        raise ValueError(cfg.family)
+
+    cache["len"] = jnp.asarray(S, jnp.int32)
+    x = rmsnorm(params["final_ln"], x[:, -1:, :], cfg.norm_eps)
+    logits = lm_head(params["head"], x, cfg.vocab_size)
+    return logits[:, 0], cache
+
+
+def decode_step(params, batch, cache, cfg: ModelConfig):
+    """One decode step.  batch: {"tokens": (B, 1)} (or {"embeds"} for audio).
+    Returns (logits (B, V), new cache)."""
+    dtype = DTYPES[cfg.dtype]
+    if cfg.embed_input:
+        x = embed(params["embed"], batch["tokens"], dtype)
+    else:
+        x = batch["embeds"].astype(dtype)
+    x = shard(x, ("batch", "act_seq", "act_embed"))
+    clen = cache["len"]
+    new_cache = dict(cache)
+
+    if cfg.family in ("dense", "moe", "audio"):
+        def body(h, scans):
+            layer, ck, cv = scans
+            if cfg.family == "moe":
+                h, ck, cv = tfm.moe_block_decode(layer, h, ck, cv, clen, cfg)
+            else:
+                h, ck, cv = tfm.dense_block_decode(layer, h, ck, cv, clen,
+                                                   cfg)
+            return h, (ck, cv)
+        x, (ks, vs) = jax.lax.scan(body, x,
+                                   (params["layers"], cache["k"], cache["v"]))
+        new_cache["k"], new_cache["v"] = ks, vs
+
+    elif cfg.family == "ssm":
+        def body(h, scans):
+            layer, s, c = scans
+            h, (s, c) = tfm.ssm_block_decode(layer, h, (s, c), cfg)
+            return h, (s, c)
+        x, (ss, cs) = jax.lax.scan(body, x, (params["layers"], cache["ssm"],
+                                             cache["conv"]))
+        new_cache["ssm"], new_cache["conv"] = ss, cs
+
+    elif cfg.family == "hybrid":
+        x0 = x
+
+        def group(h, scans):
+            layers, s_g, c_g, ck, cv = scans
+
+            def inner(hh, inner_scans):
+                layer, s, c = inner_scans
+                hh, (s, c) = tfm.ssm_block_decode(layer, hh, (s, c), cfg)
+                return hh, (s, c)
+            h, (s_g, c_g) = jax.lax.scan(inner, h, (layers, s_g, c_g))
+            h, ck, cv = tfm.shared_block_decode(params["shared"], h, x0,
+                                                ck, cv, clen, cfg)
+            return h, (s_g, c_g, ck, cv)
+        x, (ss, cs, ks, vs) = jax.lax.scan(
+            group, x, (params["layers"], cache["ssm"], cache["conv"],
+                       cache["k"], cache["v"]))
+        new_cache["ssm"], new_cache["conv"] = ss, cs
+        new_cache["k"], new_cache["v"] = ks, vs
+
+    elif cfg.family == "vlm":
+        def group(h, scans):
+            layers, ck_g, cv_g, crk, crv, cross_layer = scans
+
+            def inner(hh, inner_scans):
+                layer, ck, cv = inner_scans
+                hh, ck, cv = tfm.dense_block_decode(layer, hh, ck, cv, clen,
+                                                    cfg)
+                return hh, (ck, cv)
+            h, (ck_g, cv_g) = jax.lax.scan(inner, h, (layers, ck_g, cv_g))
+            h = tfm.cross_block_decode(cross_layer, h, crk, crv, cfg)
+            return h, (ck_g, cv_g)
+        x, (ks, vs) = jax.lax.scan(
+            group, x, (params["layers"], cache["k"], cache["v"],
+                       cache["cross_k"], cache["cross_v"], params["cross"]))
+        new_cache["k"], new_cache["v"] = ks, vs
+    else:
+        raise ValueError(cfg.family)
+
+    new_cache["len"] = clen + 1
+    x = rmsnorm(params["final_ln"], x, cfg.norm_eps)
+    logits = lm_head(params["head"], x, cfg.vocab_size)
+    return logits[:, 0], new_cache

@@ -1,0 +1,122 @@
+"""Mixture-of-Experts layer: top-k routing, sort-based static-capacity
+dispatch, expert parallelism over the ``model`` mesh axis.
+
+Dispatch strategy (production-scale; DESIGN.md §3): the Switch-style one-hot
+dispatch einsum needs an O(T * E * C) tensor — infeasible at 1M tokens.
+Instead we use the sort-based formulation:
+
+  1. top-k gating -> (T*k) (expert, prob, token) assignments;
+  2. stable sort by expert id; position-in-expert = rank within the segment;
+  3. scatter into a fixed (E, C, D) buffer (tokens beyond capacity drop —
+     classic capacity-factor semantics, counted and returned as a metric);
+  4. two grouped GEMMs over the expert axis (E sharded over ``model`` — EP);
+  5. gather back and combine weighted by router probs.
+
+Under GSPMD the (T, D) <-> (E, C, D) layout change lowers to the EP
+all-to-all; the fabric analogy is literal — message routing by content
+(DESIGN.md §2).  Aux load-balance loss follows Switch (mean fraction *
+mean prob * E).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamSpec
+from repro.sharding.partition import shard
+
+
+def moe_specs(cfg: ModelConfig):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamSpec((d, e), ("embed", None)),
+        "wi_gate": ParamSpec((e, d, f), ("experts", "embed", "mlp")),
+        "wi_up": ParamSpec((e, d, f), ("experts", "embed", "mlp")),
+        "wo": ParamSpec((e, f, d), ("experts", "mlp", "embed")),
+    }
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(n_tokens * cfg.experts_per_token * cfg.capacity_factor
+            / cfg.n_experts)
+    return max(8, (c + 7) // 8 * 8)
+
+
+def moe(params, x: jax.Array, cfg: ModelConfig):
+    """x: (B, S, D) -> (y, aux) where aux = {'aux_loss', 'dropped_frac'}.
+
+    Auto-selects the shard_map expert-parallel path (``moe_ep``) whenever a
+    multi-device mesh is active — the pjit path below is the reference
+    implementation and the single-device fallback (see moe_ep.py for the
+    measured 15.9 TB/step pathology this avoids)."""
+    from repro.models import moe_ep as ep
+    if ep.moe_ep_applicable(cfg):
+        return ep.moe_ep(params, x, cfg)
+    return moe_reference(params, x, cfg)
+
+
+def moe_reference(params, x: jax.Array, cfg: ModelConfig):
+    """Sort-based dispatch under plain pjit (oracle for moe_ep)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.experts_per_token
+    T = B * S
+    C = _capacity(T, cfg)
+    xt = x.reshape(T, D)
+
+    # ---- routing (f32 for numerics) ---------------------------------- #
+    logits = xt.astype(jnp.float32) @ params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # (T, E)
+    top_p, top_e = jax.lax.top_k(probs, K)                   # (T, K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)   # renormalize
+
+    # ---- aux load-balance loss (Switch eq. 4) ------------------------- #
+    me = jnp.mean(probs, axis=0)                             # (E,)
+    one_hot_top1 = jax.nn.one_hot(top_e[:, 0], E, dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top1, axis=0)
+    aux_loss = E * jnp.sum(me * ce) * cfg.router_aux_weight
+
+    # ---- sort-based dispatch ------------------------------------------ #
+    flat_e = top_e.reshape(-1)                               # (T*K,)
+    flat_p = top_p.reshape(-1)
+    flat_tok = jnp.repeat(jnp.arange(T), K)
+
+    order = jnp.argsort(flat_e, stable=True)                 # group by expert
+    sorted_e = flat_e[order]
+    sorted_tok = flat_tok[order]
+    # position within the expert segment
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E), side="left")
+    pos_in_e = jnp.arange(T * K) - seg_start[sorted_e]
+    keep = pos_in_e < C
+    dropped_frac = 1.0 - jnp.mean(keep.astype(jnp.float32))
+
+    # scatter tokens into the (E, C, D) expert buffer (dropped -> discarded
+    # via clamped position + mask-out on combine)
+    slot = jnp.where(keep, sorted_e * C + pos_in_e, E * C)   # overflow slot
+    buf = jnp.zeros((E * C + 1, D), x.dtype)
+    buf = buf.at[slot].set(xt[sorted_tok])
+    expert_in = buf[:-1].reshape(E, C, D)
+    expert_in = shard(expert_in, ("act_experts", "expert_capacity",
+                                  "act_embed"))
+
+    # ---- expert computation (grouped SwiGLU GEMMs, EP-sharded) -------- #
+    dtype = x.dtype
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in,
+                               params["wi_gate"].astype(dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", expert_in,
+                       params["wi_up"].astype(dtype))
+    h = shard(h, ("act_experts", "expert_capacity", "act_mlp"))
+    expert_out = jnp.einsum("ecf,efd->ecd", h, params["wo"].astype(dtype))
+    expert_out = shard(expert_out, ("act_experts", "expert_capacity",
+                                    "act_embed"))
+
+    # ---- combine ------------------------------------------------------- #
+    flat_out = jnp.concatenate(
+        [expert_out.reshape(E * C, D), jnp.zeros((1, D), dtype)], axis=0)
+    gathered = flat_out[slot]                                 # (T*K, D)
+    w = jnp.where(keep, flat_p[order], 0.0).astype(jnp.float32)
+    y = jnp.zeros((T, D), jnp.float32)
+    y = y.at[sorted_tok].add(gathered.astype(jnp.float32) * w[:, None])
+    y = y.reshape(B, S, D).astype(x.dtype)
+    y = shard(y, ("batch", "act_seq", "act_embed"))
+    return y, {"aux_loss": aux_loss, "dropped_frac": dropped_frac}

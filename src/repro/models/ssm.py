@@ -1,0 +1,267 @@
+"""Mamba2 (SSD — state-space duality) block, chunked for the MXU.
+
+The chunked SSD algorithm (Dao & Gu 2024, "Transformers are SSMs") splits
+the sequence into chunks of Q tokens: intra-chunk terms are small dense
+matmuls (MXU-friendly quadratic-in-Q work), inter-chunk terms reduce to a
+linear recurrence over per-chunk states.  Training/prefill use the chunked
+form; decode keeps the O(1) recurrent state (no KV cache — this is what
+makes the ``long_500k`` cell feasible, DESIGN.md §4).
+
+Projections are kept *unfused* (separate wz/wx/wB/wC/wdt) so each output
+lands cleanly on its own sharding (the fused in_proj of the reference CUDA
+implementation would put segment boundaries mid-shard on the ``model``
+axis — a GPU-ism that does not transfer; DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import ParamSpec, rmsnorm
+from repro.sharding.partition import shard
+
+NEG_INF = -1e30
+
+
+def ssm_specs(cfg: ModelConfig):
+    d, din = cfg.d_model, cfg.d_inner
+    gn = cfg.ssm_groups * cfg.ssm_state
+    h = cfg.ssm_heads
+    w = cfg.ssm_conv
+    return {
+        "wz": ParamSpec((d, din), ("embed", "ssm_inner")),
+        "wx": ParamSpec((d, din), ("embed", "ssm_inner")),
+        "wB": ParamSpec((d, gn), ("embed", None)),
+        "wC": ParamSpec((d, gn), ("embed", None)),
+        "wdt": ParamSpec((d, h), ("embed", "ssm_heads")),
+        "conv_x": ParamSpec((w, din), (None, "ssm_inner"), init="normal",
+                            scale=0.5),
+        "conv_B": ParamSpec((w, gn), (None, None), init="normal", scale=0.5),
+        "conv_C": ParamSpec((w, gn), (None, None), init="normal", scale=0.5),
+        "A_log": ParamSpec((h,), ("ssm_heads",), init="zeros"),
+        "D_skip": ParamSpec((h,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamSpec((h,), ("ssm_heads",), init="zeros"),
+        "norm": ParamSpec((din,), ("ssm_inner",), init="ones"),
+        "wo": ParamSpec((din, d), ("ssm_inner", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, kernel: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, T, C), kernel: (W, C)."""
+    W = kernel.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for w in range(W):
+        out = out + xp[:, w:w + x.shape[1], :] * kernel[w][None, None, :]
+    return out
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """a: (..., L) -> (..., L, L) with [i, j] = sum a[j+1..i], -inf above diag."""
+    L = a.shape[-1]
+    csum = jnp.cumsum(a, axis=-1)
+    diff = csum[..., :, None] - csum[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, diff, NEG_INF)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Chunked SSD scan.
+
+    x: (b, T, h, p)  — dt already *not* folded in (we fold here)
+    dt: (b, T, h) positive step sizes
+    A: (h,) negative decay rates
+    B, C: (b, T, g, n); heads h are grouped over g (h % g == 0)
+    Returns y: (b, T, h, p) and final state (b, h, p, n).
+    """
+    b, T, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    Q = min(chunk, T)
+    assert T % Q == 0, (T, Q)
+    c = T // Q
+    rep = h // g
+
+    xd = x * dt[..., None]                              # fold dt into x
+    a = dt * A[None, None, :]                            # (b, T, h) log-decay
+
+    # chunked views
+    xc = xd.reshape(b, c, Q, h, p)
+    ac = a.reshape(b, c, Q, h).transpose(0, 3, 1, 2)     # (b, h, c, Q)
+    Bc = B.reshape(b, c, Q, g, n)
+    Cc = C.reshape(b, c, Q, g, n)
+    Bh = jnp.repeat(Bc, rep, axis=3)                     # (b, c, Q, h, n)
+    Ch = jnp.repeat(Cc, rep, axis=3)
+
+    a_cs = jnp.cumsum(ac, axis=-1)                       # (b, h, c, Q)
+
+    # 1. intra-chunk (diagonal blocks)
+    Lmat = jnp.exp(_segsum(ac))                          # (b, h, c, Q, Q)
+    scores = jnp.einsum("bclhn,bcshn->bchls", Ch, Bh)    # (b, c, h, L, S)
+    scores = scores * Lmat.transpose(0, 2, 1, 3, 4)
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", scores, xc)
+
+    # 2. per-chunk final states
+    decay_states = jnp.exp(a_cs[..., -1:] - a_cs)        # (b, h, c, Q)
+    states = jnp.einsum("bclhn,bhcl,bclhp->bchpn", Bh, decay_states, xc)
+
+    # 3. inter-chunk recurrence (lax.scan over chunks)
+    chunk_decay = jnp.exp(a_cs[..., -1])                 # (b, h, c)
+
+    def scan_body(prev, inp):
+        s_c, d_c = inp                                   # (b,h,p,n), (b,h)
+        new = prev * d_c[..., None, None] + s_c
+        return new, prev                                 # emit state at chunk START
+
+    states_t = states.transpose(1, 0, 2, 3, 4)           # (c, b, h, p, n)
+    decay_t = chunk_decay.transpose(2, 0, 1)             # (c, b, h)
+    init = jnp.zeros((b, h, p, n), x.dtype)
+    final_state, start_states = jax.lax.scan(
+        scan_body, init, (states_t, decay_t))
+    start_states = start_states.transpose(1, 0, 2, 3, 4)  # (b, c, h, p, n)
+
+    # 4. inter-chunk output: decay from chunk start
+    out_decay = jnp.exp(a_cs)                            # (b, h, c, Q)
+    y_off = jnp.einsum("bclhn,bchpn,bhcl->bclhp", Ch, start_states,
+                       out_decay)
+
+    y = (y_diag + y_off).reshape(b, T, h, p)
+    return y, final_state
+
+
+def ssm_block(params, x: jax.Array, cfg: ModelConfig):
+    """Full Mamba2 block for train/prefill.  x: (B, T, D) -> (B, T, D)."""
+    dtype = x.dtype
+    b, T, _ = x.shape
+    h, p = cfg.ssm_heads, cfg.ssm_headdim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+
+    z = x @ params["wz"].astype(dtype)                   # (B, T, din)
+    xs = x @ params["wx"].astype(dtype)
+    Bv = x @ params["wB"].astype(dtype)
+    Cv = x @ params["wC"].astype(dtype)
+    dt = x @ params["wdt"].astype(dtype)
+
+    xs = jax.nn.silu(_causal_conv(xs, params["conv_x"].astype(dtype)))
+    Bv = jax.nn.silu(_causal_conv(Bv, params["conv_B"].astype(dtype)))
+    Cv = jax.nn.silu(_causal_conv(Cv, params["conv_C"].astype(dtype)))
+    xs = shard(xs, ("batch", "act_seq", "act_mlp"))
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    xh = xs.reshape(b, T, h, p).astype(jnp.float32)
+    Bh = Bv.reshape(b, T, g, n).astype(jnp.float32)
+    Ch = Cv.reshape(b, T, g, n).astype(jnp.float32)
+
+    y, _ = ssd_chunked(xh, dt, A, Bh, Ch, cfg.ssm_chunk)
+    y = y + xh * params["D_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, T, h * p).astype(dtype)
+
+    y = rmsnorm({"scale": params["norm"]}, y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["wo"].astype(dtype)
+    return shard(out, ("batch", "act_seq", "act_embed"))
+
+
+def ssm_prefill(params, x: jax.Array, cfg: ModelConfig):
+    """Like :func:`ssm_block` but also returns the decode carry
+    (ssm_state, conv_window) capturing the prompt."""
+    dtype = x.dtype
+    b, T, _ = x.shape
+    h, p = cfg.ssm_heads, cfg.ssm_headdim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    W = cfg.ssm_conv
+
+    z = x @ params["wz"].astype(dtype)
+    xs_pre = x @ params["wx"].astype(dtype)
+    Bv_pre = x @ params["wB"].astype(dtype)
+    Cv_pre = x @ params["wC"].astype(dtype)
+    dt = x @ params["wdt"].astype(dtype)
+
+    xs = jax.nn.silu(_causal_conv(xs_pre, params["conv_x"].astype(dtype)))
+    Bv = jax.nn.silu(_causal_conv(Bv_pre, params["conv_B"].astype(dtype)))
+    Cv = jax.nn.silu(_causal_conv(Cv_pre, params["conv_C"].astype(dtype)))
+
+    dt_f = jax.nn.softplus(dt.astype(jnp.float32)
+                           + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    xh = xs.reshape(b, T, h, p).astype(jnp.float32)
+    Bh = Bv.reshape(b, T, g, n).astype(jnp.float32)
+    Ch = Cv.reshape(b, T, g, n).astype(jnp.float32)
+
+    y, final_state = ssd_chunked(xh, dt_f, A, Bh, Ch, cfg.ssm_chunk)
+    y = y + xh * params["D_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, T, h * p).astype(dtype)
+    y = rmsnorm({"scale": params["norm"]}, y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["wo"].astype(dtype)
+    out = shard(out, ("batch", "act_seq", "act_embed"))
+
+    # conv window: the last W-1 *pre-conv* inputs, concat(x, B, C)
+    pre = jnp.concatenate([xs_pre, Bv_pre, Cv_pre], axis=-1)
+    window = pre[:, T - (W - 1):, :]
+    return out, (final_state.astype(jnp.float32), window.astype(jnp.float32))
+
+
+# --------------------------------------------------------------------------- #
+# Decode (recurrent, O(1) state)                                              #
+# --------------------------------------------------------------------------- #
+def ssm_decode_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    """(ssm_state, conv_state) carry for one layer."""
+    h, p, n = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    gn = cfg.ssm_groups * cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * gn
+    return (jnp.zeros((batch, h, p, n), dtype),
+            jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype))
+
+
+def ssm_decode_step(params, x, state, cfg: ModelConfig):
+    """x: (B, 1, D); state = (ssm_state (B,h,p,n), conv_state). Returns
+    (y (B, 1, D), new_state)."""
+    dtype = x.dtype
+    b = x.shape[0]
+    h, p = cfg.ssm_heads, cfg.ssm_headdim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    gn = g * n
+    din = cfg.d_inner
+    ssm_state, conv_state = state
+
+    xt = x[:, 0, :]
+    z = xt @ params["wz"].astype(dtype)
+    xs = xt @ params["wx"].astype(dtype)
+    Bv = xt @ params["wB"].astype(dtype)
+    Cv = xt @ params["wC"].astype(dtype)
+    dt = xt @ params["wdt"].astype(dtype)
+
+    # causal conv over the rolling window
+    new_in = jnp.concatenate([xs, Bv, Cv], axis=-1)       # (B, conv_dim)
+    window = jnp.concatenate([conv_state, new_in[:, None, :]], axis=1)
+    kernel = jnp.concatenate(
+        [params["conv_x"], params["conv_B"], params["conv_C"]],
+        axis=1).astype(dtype)                             # (W, conv_dim)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(dtype), kernel)
+    conv_out = jax.nn.silu(conv_out)
+    xs = conv_out[:, :din]
+    Bv = conv_out[:, din:din + gn]
+    Cv = conv_out[:, din + gn:]
+    new_conv_state = window[:, 1:, :]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B, h)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A[None, :])                         # (B, h)
+
+    xh = xs.reshape(b, h, p).astype(jnp.float32)
+    Bh = jnp.repeat(Bv.reshape(b, g, n), h // g, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cv.reshape(b, g, n), h // g, axis=1).astype(jnp.float32)
+
+    upd = (dt[..., None] * xh)[..., :, None] * Bh[..., None, :]  # (B,h,p,n)
+    new_ssm = ssm_state.astype(jnp.float32) * dA[..., None, None] + upd
+    y = jnp.einsum("bhpn,bhn->bhp", new_ssm, Ch)
+    y = y + xh * params["D_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, din).astype(dtype)
+
+    y = rmsnorm({"scale": params["norm"]},
+                y * jax.nn.silu(z), cfg.norm_eps)
+    out = (y @ params["wo"].astype(dtype))[:, None, :]
+    return out, (new_ssm.astype(ssm_state.dtype), new_conv_state)

@@ -1,0 +1,185 @@
+"""Decoder blocks per family + the scan-over-layers stacking machinery."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (ParamSpec, mlp, mlp_specs, rmsnorm,
+                                 rmsnorm_specs)
+from repro.sharding.partition import shard
+
+
+# --------------------------------------------------------------------------- #
+# Per-family block specs                                                      #
+# --------------------------------------------------------------------------- #
+def block_specs(cfg: ModelConfig) -> dict:
+    if cfg.family in ("dense", "audio"):
+        return {
+            "ln1": rmsnorm_specs(cfg.d_model),
+            "attn": attn.attention_specs(cfg),
+            "ln2": rmsnorm_specs(cfg.d_model),
+            "mlp": mlp_specs(cfg.d_model, cfg.d_ff),
+        }
+    if cfg.family == "moe":
+        return {
+            "ln1": rmsnorm_specs(cfg.d_model),
+            "attn": attn.attention_specs(cfg),
+            "ln2": rmsnorm_specs(cfg.d_model),
+            "moe": moe_mod.moe_specs(cfg),
+        }
+    if cfg.family in ("ssm", "hybrid"):
+        return {
+            "ln1": rmsnorm_specs(cfg.d_model),
+            "ssm": ssm_mod.ssm_specs(cfg),
+        }
+    if cfg.family == "vlm":
+        # self-attention block; cross blocks are stacked separately
+        return {
+            "ln1": rmsnorm_specs(cfg.d_model),
+            "attn": attn.attention_specs(cfg),
+            "ln2": rmsnorm_specs(cfg.d_model),
+            "mlp": mlp_specs(cfg.d_model, cfg.d_ff),
+        }
+    raise ValueError(cfg.family)
+
+
+def cross_block_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln": rmsnorm_specs(cfg.d_model),
+        "attn": attn.attention_specs(cfg),
+        "gate": ParamSpec((1,), (None,), init="zeros"),
+    }
+
+
+def shared_block_specs(cfg: ModelConfig) -> dict:
+    """zamba2's weight-tied attention+MLP block (+ the 2D -> D in-proj that
+    folds in the residual-stream/original-embedding concat)."""
+    return {
+        "in_proj": ParamSpec((2 * cfg.d_model, cfg.d_model),
+                             ("embed", None)),
+        "ln1": rmsnorm_specs(cfg.d_model),
+        "attn": attn.attention_specs(cfg),
+        "ln2": rmsnorm_specs(cfg.d_model),
+        "mlp": mlp_specs(cfg.d_model, cfg.d_ff),
+        "gate": ParamSpec((1,), (None,), init="zeros"),
+    }
+
+
+# --------------------------------------------------------------------------- #
+# Train / prefill blocks                                                      #
+# --------------------------------------------------------------------------- #
+def dense_block(params, x, cfg: ModelConfig, positions):
+    h = x + attn.self_attention(params["attn"],
+                                rmsnorm(params["ln1"], x, cfg.norm_eps),
+                                cfg, positions)
+    return h + mlp(params["mlp"], rmsnorm(params["ln2"], h, cfg.norm_eps))
+
+
+def moe_block(params, x, cfg: ModelConfig, positions):
+    h = x + attn.self_attention(params["attn"],
+                                rmsnorm(params["ln1"], x, cfg.norm_eps),
+                                cfg, positions)
+    y, aux = moe_mod.moe(params["moe"],
+                         rmsnorm(params["ln2"], h, cfg.norm_eps), cfg)
+    return h + y, aux
+
+
+def ssm_block(params, x, cfg: ModelConfig):
+    return x + ssm_mod.ssm_block(params["ssm"],
+                                 rmsnorm(params["ln1"], x, cfg.norm_eps),
+                                 cfg)
+
+
+def cross_block(params, x, vision_kv, cfg: ModelConfig):
+    y = attn.cross_attention(params["attn"],
+                             rmsnorm(params["ln"], x, cfg.norm_eps),
+                             vision_kv, cfg)
+    return x + jnp.tanh(params["gate"].astype(x.dtype)) * y
+
+
+def shared_block(params, x, x0, cfg: ModelConfig, positions):
+    """zamba2 shared block: concat(current, original embedding) -> D."""
+    cat = jnp.concatenate([x, x0], axis=-1)
+    h = cat @ params["in_proj"].astype(x.dtype)
+    h = h + attn.self_attention(params["attn"],
+                                rmsnorm(params["ln1"], h, cfg.norm_eps),
+                                cfg, positions)
+    h = h + mlp(params["mlp"], rmsnorm(params["ln2"], h, cfg.norm_eps))
+    return x + jnp.tanh(params["gate"].astype(x.dtype)) * h
+
+
+# --------------------------------------------------------------------------- #
+# Decode blocks (single token, cached)                                        #
+# --------------------------------------------------------------------------- #
+def dense_block_decode(params, x, ck, cv, clen, cfg: ModelConfig):
+    y, ck, cv = attn.decode_attention(
+        params["attn"], rmsnorm(params["ln1"], x, cfg.norm_eps),
+        ck, cv, clen, cfg)
+    h = x + y
+    h = h + mlp(params["mlp"], rmsnorm(params["ln2"], h, cfg.norm_eps))
+    return h, ck, cv
+
+
+def moe_block_decode(params, x, ck, cv, clen, cfg: ModelConfig):
+    y, ck, cv = attn.decode_attention(
+        params["attn"], rmsnorm(params["ln1"], x, cfg.norm_eps),
+        ck, cv, clen, cfg)
+    h = x + y
+    y2, _ = moe_mod.moe(params["moe"],
+                        rmsnorm(params["ln2"], h, cfg.norm_eps), cfg)
+    return h + y2, ck, cv
+
+
+def ssm_block_decode(params, x, state, cfg: ModelConfig):
+    y, state = ssm_mod.ssm_decode_step(
+        params["ssm"], rmsnorm(params["ln1"], x, cfg.norm_eps), state, cfg)
+    return x + y, state
+
+
+def cross_block_decode(params, x, cross_k, cross_v, cfg: ModelConfig):
+    """Cross-attn at decode reuses the prefill-computed vision KV."""
+    import math
+    h = rmsnorm(params["ln"], x, cfg.norm_eps)
+    B = x.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", h, params["attn"]["wq"].astype(x.dtype))
+    H, hd = q.shape[2], q.shape[3]
+    K = cross_k.shape[2]
+    G = H // K
+    qg = q.reshape(B, K, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,btkh->bkgt", qg,
+                   cross_k.astype(jnp.float32)) / math.sqrt(hd)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgt,btkh->bkgh", p, cross_v.astype(jnp.float32))
+    out = out.reshape(B, 1, H, hd).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["attn"]["wo"].astype(x.dtype))
+    return x + jnp.tanh(params["gate"].astype(x.dtype)) * y
+
+
+def shared_block_decode(params, x, x0, ck, cv, clen, cfg: ModelConfig):
+    cat = jnp.concatenate([x, x0], axis=-1)
+    h = cat @ params["in_proj"].astype(x.dtype)
+    y, ck, cv = attn.decode_attention(
+        params["attn"], rmsnorm(params["ln1"], h, cfg.norm_eps),
+        ck, cv, clen, cfg)
+    h = h + y
+    h = h + mlp(params["mlp"], rmsnorm(params["ln2"], h, cfg.norm_eps))
+    return x + jnp.tanh(params["gate"].astype(x.dtype)) * h, ck, cv
+
+
+# --------------------------------------------------------------------------- #
+# Remat policy                                                                #
+# --------------------------------------------------------------------------- #
+def remat_wrap(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)       # "full": save only block boundaries

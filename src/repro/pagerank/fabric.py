@@ -1,0 +1,21 @@
+"""PageRank executed on the fabric *simulator* (the faithful tier).
+
+Thin wrapper over ``core.schedule.pagerank`` returning both the rank vector
+and the paper-accounted step count, so callers can cross-check against the
+analytical model (``core.timing``) and against the native JAX implementation
+(``pagerank.dense``) — the three tiers of DESIGN.md §2.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core import schedule, timing
+
+
+def pagerank_on_fabric(H: jax.Array, n_iters: int = 100, d: float = 0.85,
+                       use_messages: bool = False):
+    """Returns (pr, steps, seconds_at_200MHz)."""
+    res = schedule.pagerank(H, n_iters=n_iters, d=d,
+                            use_messages=use_messages)
+    seconds = float(res.steps) * timing.DEFAULT_SPEC.step_seconds
+    return res.result, int(res.steps), seconds

@@ -1,0 +1,3 @@
+from repro.serve.engine import Request, ServeEngine, batched_decode_fn
+
+__all__ = ["Request", "ServeEngine", "batched_decode_fn"]

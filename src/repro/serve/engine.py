@@ -1,0 +1,137 @@
+"""Batched serving engine: prefill + decode with slot-based continuous
+batching (host-side scheduler over a fixed device batch).
+
+The decode step is the paper's workload shape: every matmul against
+stationary weights with a single activation vector per sequence — the
+fabric-MV schedule (DESIGN.md §2).  The engine keeps a fixed-size device
+batch of ``n_slots`` sequences; finished sequences free their slot and the
+scheduler immediately prefills a queued request into it (continuous
+batching a la vLLM/Orca, collapsed to the synchronous JAX step model).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new_tokens: int = 32
+    temperature: float = 0.0      # 0 => greedy
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Single-host engine (the slot scheduler is pure host logic; the device
+    functions are jit'd once per shape)."""
+
+    def __init__(self, cfg: ModelConfig, params, max_len: int = 512,
+                 eos_id: int | None = None, seed: int = 0):
+        if not cfg.embed_input:
+            raise ValueError("token serving requires an embedding frontend")
+        self.cfg = cfg
+        self.params = params
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self._key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(
+            lambda p, b, c: M.decode_step(p, b, c, cfg))
+        self._prefill = jax.jit(
+            lambda p, b: M.prefill(p, b, cfg, max_len))
+
+    # ---------------- single-sequence paths ---------------- #
+    def generate(self, prompt: np.ndarray, max_new_tokens: int = 32,
+                 temperature: float = 0.0) -> list[int]:
+        logits, cache = self._prefill(
+            self.params, {"tokens": jnp.asarray(prompt)[None, :]})
+        out = []
+        tok = self._sample(logits, temperature)
+        for _ in range(max_new_tokens):
+            t = int(tok[0])
+            out.append(t)
+            if self.eos_id is not None and t == self.eos_id:
+                break
+            logits, cache = self._decode(
+                self.params, {"tokens": tok[:, None]}, cache)
+            tok = self._sample(logits, temperature)
+        return out
+
+    # ---------------- batched continuous serving ---------------- #
+    def serve(self, requests: list[Request], n_slots: int = 4,
+              max_steps: int = 10_000) -> list[Request]:
+        """Run all requests to completion with ``n_slots`` device slots.
+        Sequences are prefixed independently (per-slot prefill) and decoded
+        as one batched step; finished slots are refilled from the queue."""
+        queue = list(requests)
+        slots: list[Request | None] = [None] * n_slots
+        caches: list = [None] * n_slots
+        last_tok = np.zeros((n_slots,), np.int32)
+
+        def fill_slot(i: int) -> None:
+            if not queue:
+                slots[i] = None
+                return
+            req = queue.pop(0)
+            logits, cache = self._prefill(
+                self.params, {"tokens": jnp.asarray(req.prompt)[None, :]})
+            tok = self._sample(logits, req.temperature)
+            req.output.append(int(tok[0]))
+            slots[i] = req
+            caches[i] = cache
+            last_tok[i] = int(tok[0])
+
+        for i in range(n_slots):
+            fill_slot(i)
+
+        for _ in range(max_steps):
+            active = [i for i, r in enumerate(slots) if r is not None]
+            if not active:
+                break
+            for i in active:
+                req = slots[i]
+                done = (len(req.output) >= req.max_new_tokens or
+                        (self.eos_id is not None
+                         and req.output[-1] == self.eos_id))
+                if done:
+                    req.done = True
+                    fill_slot(i)
+            active = [i for i, r in enumerate(slots) if r is not None]
+            if not active:
+                break
+            # one decode step per active slot (batch=1 caches); a production
+            # deployment shares one batched cache — see launch/serve.py for
+            # the fixed-batch variant the dry-run lowers.
+            for i in active:
+                req = slots[i]
+                logits, caches[i] = self._decode(
+                    self.params,
+                    {"tokens": jnp.asarray([[last_tok[i]]], jnp.int32)},
+                    caches[i])
+                tok = self._sample(logits, req.temperature)
+                req.output.append(int(tok[0]))
+                last_tok[i] = int(tok[0])
+        return requests
+
+    def _sample(self, logits: jax.Array, temperature: float) -> jax.Array:
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.categorical(
+            sub, logits / temperature, axis=-1).astype(jnp.int32)
+
+
+def batched_decode_fn(cfg: ModelConfig) -> Callable:
+    """The fixed-batch decode step the dry-run lowers for decode cells."""
+    def step(params, batch, cache):
+        return M.decode_step(params, batch, cache, cfg)
+    return step

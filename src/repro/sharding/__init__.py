@@ -1,0 +1,8 @@
+from repro.sharding.partition import (DEFAULT_RULES, MULTIPOD_RULES,
+                                      current_mesh, logical_to_pspec,
+                                      param_shardings, set_mesh, shard,
+                                      use_mesh)
+
+__all__ = ["DEFAULT_RULES", "MULTIPOD_RULES", "current_mesh",
+           "logical_to_pspec", "param_shardings", "set_mesh", "shard",
+           "use_mesh"]

@@ -1,0 +1,193 @@
+"""Logical-axis sharding rules (MaxText-style) -> GSPMD shardings.
+
+Every parameter and activation in the model layer code is annotated with
+*logical* axis names; this module maps them onto physical mesh axes.  The
+defaults implement:
+
+* tensor parallelism over ``model``  (heads / mlp / experts / vocab)
+* FSDP over ``data``                 (the ``embed`` axis of weights is
+                                      sharded over the data axis; GSPMD
+                                      all-gathers per layer — ZeRO-3)
+* data parallelism over ``pod`` x ``data`` for activations
+* multi-pod weight sharding adds ``pod`` to the FSDP axis so 90B-class
+  models fit (DESIGN.md §3).
+
+GSPMD tolerates non-divisible shardings by padding (e.g. yi-34b's 56 heads
+on a 16-way model axis), which ``shard_map`` would reject — that is why the
+model stack uses pjit-with-constraints rather than shard_map, while the
+collective-explicit fabric paths (``core.fabric_matvec``) use shard_map.
+
+The active mesh is process-global (set by launchers via :func:`set_mesh` or
+the :func:`use_mesh` context manager); when unset, annotations are no-ops so
+unit tests run on a single CPU device unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axis (or tuple of axes, or None = replicated)
+DEFAULT_RULES: dict[str, object] = {
+    # weights
+    "embed": "data",            # FSDP shard of the d_model axis of weights
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "qkv": "model",
+    "mlp": "model",
+    "experts": "model",
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "conv": None,
+    "head_dim": None,
+    # activations
+    "batch": "data",
+    "act_seq": None,
+    "act_embed": None,
+    "act_heads": "model",
+    "act_mlp": "model",
+    "act_experts": "model",
+    "expert_capacity": None,
+    "vision_seq": None,
+    "kv_seq": "model",          # decode KV cache: sequence-sharded
+}
+
+# Multi-pod: batch over (pod, data); FSDP over (pod, data) as well.
+MULTIPOD_RULES: dict[str, object] = dict(
+    DEFAULT_RULES,
+    embed=("pod", "data"),
+    batch=("pod", "data"),
+)
+
+# Inference (prefill/decode): WEIGHT-STATIONARY — the paper's core scheme.
+# No FSDP axis on weights: a serve step must not all-gather parameters
+# (measured 1.5 GB/step of FSDP weight gathers on llama3-8b decode_32k —
+# EXPERIMENTS.md §Perf iteration 2); bf16 weights sharded over `model`
+# alone fit every assigned arch (90B bf16 / 16 = 11.3 GB < 16 GB HBM).
+INFERENCE_RULES: dict[str, object] = dict(DEFAULT_RULES, embed=None)
+INFERENCE_MULTIPOD_RULES: dict[str, object] = dict(
+    MULTIPOD_RULES, embed=None)
+
+_STATE = threading.local()
+
+
+def set_mesh(mesh: Mesh | None, rules: dict | None = None) -> None:
+    _STATE.mesh = mesh
+    _STATE.rules = rules if rules is not None else (
+        MULTIPOD_RULES if mesh is not None and "pod" in mesh.axis_names
+        else DEFAULT_RULES)
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_STATE, "mesh", None)
+
+
+def current_rules() -> dict:
+    return getattr(_STATE, "rules", DEFAULT_RULES)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh | None, rules: dict | None = None):
+    prev_mesh = current_mesh()
+    prev_rules = current_rules()
+    set_mesh(mesh, rules)
+    try:
+        yield
+    finally:
+        set_mesh(prev_mesh, prev_rules)
+
+
+def logical_to_pspec(axes: tuple[str | None, ...],
+                     rules: dict | None = None) -> P:
+    rules = rules or current_rules()
+    phys = []
+    used: set[str] = set()
+
+    def resolve(a):
+        r = rules.get(a) if a is not None else None
+        if r is None:
+            return None
+        items = r if isinstance(r, tuple) else (r,)
+        free = tuple(x for x in items if x not in used)
+        used.update(free)
+        if not free:
+            return None
+        return free if len(free) > 1 else free[0]
+
+    for a in axes:
+        phys.append(resolve(a))
+    return P(*phys)
+
+
+def shard(x: jax.Array, axes: tuple[str | None, ...],
+          rules: dict | None = None) -> jax.Array:
+    """Annotate an activation with a logical sharding (no-op without mesh)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_pspec(axes, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def is_logical_axes(x) -> bool:
+    """A logical-axes annotation: tuple of (str | None) — and NOT a
+    NamedTuple container like OptState (which is also a tuple)."""
+    return (isinstance(x, tuple) and not hasattr(x, "_fields")
+            and all(e is None or isinstance(e, str) for e in x))
+
+
+def param_shardings(logical_tree, mesh: Mesh | None = None,
+                    rules: dict | None = None):
+    """Map a pytree of logical-axis tuples to NamedShardings (or None)."""
+    mesh = mesh or current_mesh()
+    if mesh is None:
+        return jax.tree.map(lambda _: None, logical_tree,
+                            is_leaf=is_logical_axes)
+    return jax.tree.map(
+        lambda axes: NamedSharding(mesh, logical_to_pspec(axes, rules)),
+        logical_tree, is_leaf=is_logical_axes)
+
+
+def fitted_pspec(shape: tuple[int, ...], axes: tuple[str | None, ...],
+                 rules: dict | None = None) -> P:
+    """Shape-aware sharding: like :func:`logical_to_pspec` but drops mesh
+    axes that do not evenly divide the dimension (jit input shardings must
+    divide; e.g. kv_heads=8 on a 16-way model axis -> replicated)."""
+    rules = rules or current_rules()
+    mesh = current_mesh()
+    sizes = dict(zip(mesh.axis_names, mesh.shape.values())) if mesh else {}
+    phys = []
+    used: set[str] = set()
+    for dim, a in zip(shape, axes):
+        r = rules.get(a) if a is not None else None
+        if r is None:
+            phys.append(None)
+            continue
+        items = r if isinstance(r, tuple) else (r,)
+        free = [x for x in items if x not in used]
+        # greedily keep the prefix whose product divides the dim
+        kept = []
+        prod = 1
+        for x in free:
+            if dim % (prod * sizes.get(x, 1)) == 0:
+                kept.append(x)
+                prod *= sizes.get(x, 1)
+        used.update(kept)
+        if not kept:
+            phys.append(None)
+        else:
+            phys.append(tuple(kept) if len(kept) > 1 else kept[0])
+    return P(*phys)
+
+
+def fitted_shardings(abstract_tree, logical_tree, mesh: Mesh,
+                     rules: dict | None = None):
+    """NamedShardings fitted to concrete shapes (params / inputs / caches)."""
+    def one(spec, axes):
+        return NamedSharding(mesh, fitted_pspec(spec.shape, axes, rules))
+    return jax.tree.map(one, abstract_tree, logical_tree,
+                        is_leaf=lambda x: hasattr(x, "shape")
+                        and hasattr(x, "dtype"))

@@ -1,0 +1,47 @@
+"""Gradient compression with error feedback (cross-pod all-reduce trick).
+
+Int8 stochastic-free quantization with a per-tensor scale; the quantization
+error is carried in an error-feedback buffer and re-added next step, so the
+*accumulated* update is unbiased (1-bit-Adam-style convergence behaviour).
+On a real multi-pod deployment the int8 tensor is what crosses the
+data-center interconnect (4x fewer bytes on the ``pod`` axis reduction);
+here we model compress -> (reduce) -> decompress, which is numerically
+identical on one host and keeps the trick testable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array):
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_with_error_feedback(grads, ef):
+    """Per-leaf: g' = deq(quant(g + ef)); ef' = (g + ef) - g'."""
+    def leaf(g, e):
+        corrected = g + e
+        q, scale = quantize_int8(corrected)
+        deq = dequantize_int8(q, scale)
+        return deq, corrected - deq
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(ef)
+    outs = [leaf(g, e) for g, e in zip(flat_g, flat_e)]
+    new_g = treedef.unflatten([o[0] for o in outs])
+    new_e = treedef.unflatten([o[1] for o in outs])
+    return new_g, new_e
+
+
+def compressed_bytes(tree) -> int:
+    """Wire bytes if this tree were all-reduced compressed (int8 + scale)."""
+    return sum(x.size + 4 for x in jax.tree.leaves(tree))

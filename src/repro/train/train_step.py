@@ -1,0 +1,94 @@
+"""Loss + train step: next-token CE, grad accumulation, remat, metrics.
+
+The step is a pure function suitable for ``jax.jit`` with ``in_shardings``
+from ``sharding.partition`` — the dry-run lowers exactly this function.
+Gradient accumulation runs microbatches through ``lax.scan`` (XLA overlaps
+each microbatch's gradient reduce with the next microbatch's compute — the
+collective/compute overlap knob of DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import model as M
+from repro.train.optimizer import (OptimizerConfig, OptState, adamw_update,
+                                   init_opt_state)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """Mean next-token CE in f32.  logits: (B, S, V); labels: (B, S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits, aux = M.forward(params, batch, cfg)
+    if "labels" in batch:                      # audio stub: explicit labels
+        loss = cross_entropy(logits, batch["labels"])
+    else:                                      # next-token prediction
+        loss = cross_entropy(logits[:, :-1], batch["tokens"][:, 1:])
+    total = loss + aux["aux_loss"]
+    metrics = {"loss": loss, "aux_loss": aux["aux_loss"],
+               "dropped_frac": aux["dropped_frac"]}
+    return total, metrics
+
+
+def _split_microbatches(batch, n: int):
+    return jax.tree.map(lambda x: x.reshape((n, x.shape[0] // n)
+                                            + x.shape[1:]), batch)
+
+
+def train_step(params, opt_state: OptState, batch, cfg: ModelConfig,
+               opt_cfg: OptimizerConfig, accum_steps: int = 1):
+    """One optimizer step.  ``accum_steps > 1`` scans microbatches."""
+    if accum_steps == 1:
+        (_, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, cfg)
+    else:
+        micro = _split_microbatches(batch, accum_steps)
+
+        def accum(carry, mb):
+            g_acc, m_acc = carry
+            (_, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, mb, cfg)
+            g_acc = jax.tree.map(jnp.add, g_acc, g)
+            m_acc = jax.tree.map(jnp.add, m_acc, m)
+            return (g_acc, m_acc), None
+
+        zeros_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                               params)
+        zeros_m = {"loss": jnp.zeros(()), "aux_loss": jnp.zeros(()),
+                   "dropped_frac": jnp.zeros(())}
+        (grads, metrics), _ = jax.lax.scan(accum, (zeros_g, zeros_m), micro)
+        grads = jax.tree.map(lambda g: g / accum_steps, grads)
+        metrics = jax.tree.map(lambda m: m / accum_steps, metrics)
+
+    params, opt_state, opt_metrics = adamw_update(opt_cfg, params, grads,
+                                                  opt_state)
+    metrics.update(opt_metrics)
+    return params, opt_state, metrics
+
+
+def make_train_state(cfg: ModelConfig, key: jax.Array,
+                     compression: str = "int8_ef"):
+    """(params fp32 master, opt_state) — convenience for examples/tests.
+    ``compression`` defaults to allocating the ef buffer so tests exercising
+    compressed training have it; production passes the OptimizerConfig
+    value."""
+    params = M.init_params(
+        cfg, key) if cfg.dtype == "float32" else jax.tree.map(
+        lambda x: x.astype(jnp.float32), M.init_params(cfg, key))
+    return params, init_opt_state(params, compression)

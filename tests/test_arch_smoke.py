@@ -1,0 +1,126 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward + one train step on CPU, asserting output shapes and no NaNs.
+(The FULL configs are exercised only via the dry-run.)"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.base import SHAPES, ShapeConfig, applicable_shapes
+from repro.data.pipeline import make_batch
+from repro.models import model as M
+from repro.train import OptimizerConfig, make_train_state, train_step
+
+SMOKE_SHAPE = ShapeConfig("smoke", seq_len=16, global_batch=2, kind="train")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    batch = make_batch(cfg, SMOKE_SHAPE, step=0)
+    params, opt_state = make_train_state(cfg, jax.random.PRNGKey(0))
+
+    logits, aux = M.forward(params, batch, cfg)
+    B, S = SMOKE_SHAPE.global_batch, SMOKE_SHAPE.seq_len
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not np.any(np.isnan(np.asarray(logits, np.float32)))
+
+    params2, opt_state2, metrics = train_step(
+        params, opt_state, batch, cfg,
+        OptimizerConfig(warmup_steps=1, total_steps=10))
+    assert np.isfinite(float(metrics["loss"]))
+    assert float(metrics["grad_norm"]) > 0
+    # params actually moved
+    delta = sum(float(jnp.sum(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(params),
+                                jax.tree.leaves(params2)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_path(arch):
+    cfg = get_smoke_config(arch)
+    batch = make_batch(cfg, SMOKE_SHAPE, step=1)
+    batch.pop("labels", None)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    _, cache = M.prefill(params, batch, cfg, max_len=SMOKE_SHAPE.seq_len + 4)
+    if cfg.embed_input:
+        db = {"tokens": jnp.zeros((SMOKE_SHAPE.global_batch, 1), jnp.int32)}
+    else:
+        db = {"embeds": jnp.zeros((SMOKE_SHAPE.global_batch, 1, cfg.d_model))}
+    logits, cache = M.decode_step(params, db, cache, cfg)
+    assert logits.shape == (SMOKE_SHAPE.global_batch, cfg.vocab_size)
+    assert not np.any(np.isnan(np.asarray(logits, np.float32)))
+    assert int(cache["len"]) == SMOKE_SHAPE.seq_len + 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    """Pin the exact assigned numbers (typo guard)."""
+    cfg = get_config(arch)
+    expected = {
+        "yi-34b": (60, 7168, 56, 8, 20480, 64000),
+        "llama3-8b": (32, 4096, 32, 8, 14336, 128256),
+        "internlm2-1.8b": (24, 2048, 16, 8, 8192, 92544),
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "granite-moe-3b-a800m": (32, 1536, 24, 8, 512, 49155),
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "mamba2-2.7b": (64, 2560, 0, 0, 0, 50280),
+        "llama-3.2-vision-90b": (100, 8192, 64, 8, 28672, 128256),
+        "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+           cfg.vocab_size)
+    assert got == expected, (arch, got, expected)
+    if arch == "granite-moe-3b-a800m":
+        assert (cfg.n_experts, cfg.experts_per_token) == (40, 8)
+    if arch == "olmoe-1b-7b":
+        assert (cfg.n_experts, cfg.experts_per_token) == (64, 8)
+    if arch == "mamba2-2.7b":
+        assert cfg.ssm_state == 128
+    if arch == "zamba2-2.7b":
+        assert cfg.ssm_state == 64 and cfg.family == "hybrid"
+    if arch == "llama-3.2-vision-90b":
+        assert cfg.family == "vlm" and cfg.n_layers % cfg.cross_attn_every == 0
+    if arch == "musicgen-large":
+        assert cfg.family == "audio" and not cfg.embed_input
+
+
+def test_shape_registry():
+    assert SHAPES["train_4k"].seq_len == 4096
+    assert SHAPES["train_4k"].global_batch == 256
+    assert SHAPES["prefill_32k"].seq_len == 32768
+    assert SHAPES["prefill_32k"].global_batch == 32
+    assert SHAPES["decode_32k"].global_batch == 128
+    assert SHAPES["decode_32k"].is_decode
+    assert SHAPES["long_500k"].seq_len == 524288
+    assert SHAPES["long_500k"].global_batch == 1
+
+
+def test_applicability_rules():
+    """long_500k only for sub-quadratic archs (DESIGN.md §4)."""
+    cells = 0
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        shapes = applicable_shapes(cfg)
+        if arch in ("mamba2-2.7b", "zamba2-2.7b"):
+            assert "long_500k" in shapes
+        else:
+            assert "long_500k" not in shapes
+        cells += len(shapes)
+    assert cells == 32          # 10x3 + 2
+
+
+def test_param_counts_in_expected_range():
+    """Analytical param counts should land near the named model sizes."""
+    expect = {"yi-34b": (30e9, 40e9), "llama3-8b": (7e9, 9e9),
+              "internlm2-1.8b": (1.5e9, 2.3e9), "granite-3-8b": (7e9, 10e9),
+              "mamba2-2.7b": (2.2e9, 3.2e9),
+              "llama-3.2-vision-90b": (80e9, 100e9),
+              "zamba2-2.7b": (2.2e9, 3.4e9),
+              "olmoe-1b-7b": (6e9, 8e9)}
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo < n < hi, (arch, f"{n:,}")

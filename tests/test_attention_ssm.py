@@ -1,0 +1,140 @@
+"""Attention + SSD properties: flash == naive, chunk invariance, GQA, RoPE."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import ssm as ssm_mod
+from repro.models.layers import apply_rope, init_tree, rmsnorm, rmsnorm_specs
+
+
+def _naive_attention(q, k, v, causal=True):
+    """O(S^2) reference with full score matrix. q:(B,S,H,hd) k/v:(B,T,K,hd)."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    G = H // K
+    kr = np.repeat(np.asarray(k, np.float32), G, axis=2)
+    vr = np.repeat(np.asarray(v, np.float32), G, axis=2)
+    s = np.einsum("bshd,bthd->bhst", np.asarray(q, np.float32), kr)
+    s /= math.sqrt(hd)
+    if causal:
+        T = kr.shape[1]
+        mask = np.tril(np.ones((S, T), bool))
+        s = np.where(mask[None, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    return np.einsum("bhst,bthd->bshd", p, vr)
+
+
+@pytest.mark.parametrize("S,H,K,chunk", [
+    (32, 4, 4, 8), (32, 8, 2, 16), (64, 4, 1, 32), (64, 6, 3, 64),
+])
+def test_flash_matches_naive(S, H, K, chunk):
+    hd = 16
+    ks = jax.random.split(jax.random.PRNGKey(S + H), 3)
+    q = jax.random.normal(ks[0], (2, S, H, hd))
+    k = jax.random.normal(ks[1], (2, S, K, hd))
+    v = jax.random.normal(ks[2], (2, S, K, hd))
+    got = attn._flash_gqa(q, k, v, causal=True, k_chunk=chunk)
+    want = _naive_attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4, atol=2e-4)
+
+
+@given(chunk=st.sampled_from([4, 8, 16, 32, 64]))
+@settings(max_examples=8, deadline=None)
+def test_flash_chunk_invariance(chunk):
+    """Property: the online-softmax result is independent of chunk size."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 8))
+    k = jax.random.normal(ks[1], (1, 64, 2, 8))
+    v = jax.random.normal(ks[2], (1, 64, 2, 8))
+    ref = attn._flash_gqa(q, k, v, causal=True, k_chunk=64)
+    got = attn._flash_gqa(q, k, v, causal=True, k_chunk=chunk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_rope_preserves_norm_and_relativity():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, 16))
+    pos = jnp.arange(8)[None]
+    y = apply_rope(x, pos, theta=1e4)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 16))
+    def dot_at(i, j):
+        qi = apply_rope(q, jnp.array([[i]]), 1e4)[0, 0, 0]
+        kj = apply_rope(k, jnp.array([[j]]), 1e4)[0, 0, 0]
+        return float(jnp.dot(qi, kj))
+    assert dot_at(3, 1) == pytest.approx(dot_at(7, 5), rel=1e-4)
+    assert dot_at(10, 2) == pytest.approx(dot_at(18, 10), rel=1e-4)
+
+
+def test_rmsnorm_scale_invariant_direction():
+    p = init_tree(rmsnorm_specs(16), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 16))
+    y1 = rmsnorm(p, x)
+    y2 = rmsnorm(p, 5.0 * x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5)
+
+
+@given(T=st.sampled_from([16, 32, 64]), h=st.sampled_from([2, 4]))
+@settings(max_examples=6, deadline=None)
+def test_ssd_causality(T, h):
+    """Property: perturbing x at position t never changes y before t."""
+    p, g, n = 8, 1, 8
+    ks = jax.random.split(jax.random.PRNGKey(T * h), 5)
+    x = jax.random.normal(ks[0], (1, T, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, T, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    B = jax.random.normal(ks[3], (1, T, g, n))
+    C = jax.random.normal(ks[4], (1, T, g, n))
+    y0, _ = ssm_mod.ssd_chunked(x, dt, A, B, C, chunk=16)
+    t = T // 2
+    x2 = x.at[:, t].add(10.0)
+    y1, _ = ssm_mod.ssd_chunked(x2, dt, A, B, C, chunk=16)
+    np.testing.assert_allclose(np.asarray(y0[:, :t]), np.asarray(y1[:, :t]),
+                               rtol=1e-5, atol=1e-5)
+    assert not np.allclose(np.asarray(y0[:, t:]), np.asarray(y1[:, t:]))
+
+
+def test_ssd_decay_forgets():
+    """With strong decay (dt*A << 0), the state forgets: outputs at the end
+    are independent of early inputs."""
+    T, h, p, g, n = 64, 2, 4, 1, 4
+    ks = jax.random.split(jax.random.PRNGKey(5), 5)
+    x = jax.random.normal(ks[0], (1, T, h, p))
+    dt = jnp.full((1, T, h), 8.0)          # huge steps
+    A = -jnp.ones((h,)) * 4.0              # strong decay
+    B = jax.random.normal(ks[3], (1, T, g, n))
+    C = jax.random.normal(ks[4], (1, T, g, n))
+    y0, _ = ssm_mod.ssd_chunked(x, dt, A, B, C, chunk=16)
+    x2 = x.at[:, 0].add(100.0)
+    y1, _ = ssm_mod.ssd_chunked(x2, dt, A, B, C, chunk=16)
+    np.testing.assert_allclose(np.asarray(y0[:, -1]), np.asarray(y1[:, -1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_decode_attention_matches_prefill():
+    """decode_attention at position S must equal full attention's last row."""
+    cfg = ModelConfig(name="t", family="dense", n_layers=1, d_model=32,
+                      n_heads=4, n_kv_heads=2, d_ff=64, vocab_size=10,
+                      head_dim=8, dtype="float32", rope_theta=1e4)
+    params = init_tree(attn.attention_specs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 9, 32))
+    pos = jnp.broadcast_to(jnp.arange(9)[None], (2, 9))
+    full = attn.self_attention(params, x, cfg, pos)
+    _, k, v = attn._project_qkv(params, x[:, :8], x[:, :8], cfg, pos[:, :8])
+    ck = jnp.zeros((2, 16, 2, 8)).at[:, :8].set(k)
+    cv = jnp.zeros((2, 16, 2, 8)).at[:, :8].set(v)
+    y, _, _ = attn.decode_attention(params, x[:, 8:9], ck, cv,
+                                    jnp.int32(8), cfg)
+    np.testing.assert_allclose(np.asarray(y[:, 0]), np.asarray(full[:, 8]),
+                               rtol=2e-3, atol=2e-3)

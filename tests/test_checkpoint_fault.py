@@ -1,0 +1,168 @@
+"""Checkpointing (atomicity, resume, elastic re-mesh) + fault policies."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_smoke_config
+from repro.configs.base import ShapeConfig
+from repro.data.pipeline import DataIterator, make_batch
+from repro.train import (OptimizerConfig, checkpoint as ckpt,
+                         make_train_state, train_step)
+from repro.train.fault import (PreemptionGuard, StragglerPolicy,
+                               assign_shards, reassign_on_failure,
+                               run_with_restarts)
+
+SHAPE = ShapeConfig("t", seq_len=16, global_batch=4, kind="train")
+
+
+def test_save_restore_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(10, dtype=jnp.float32),
+            "b": {"c": jnp.ones((3, 4), jnp.bfloat16)}}
+    ckpt.save(str(tmp_path), 7, tree, extra={"data_step": 42})
+    restored, step, extra = ckpt.restore(str(tmp_path), tree)
+    assert step == 7 and extra["data_step"] == 42
+    np.testing.assert_array_equal(np.asarray(restored["a"]),
+                                  np.asarray(tree["a"]))
+    assert restored["b"]["c"].dtype == jnp.bfloat16
+
+
+def test_latest_and_gc(tmp_path):
+    tree = {"x": jnp.zeros((2,))}
+    for s in [1, 5, 3]:
+        ckpt.save(str(tmp_path), s, tree)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    ckpt.garbage_collect(str(tmp_path), keep_last=1)
+    assert ckpt.list_steps(str(tmp_path)) == [5]
+
+
+def test_crashed_writer_is_ignored(tmp_path):
+    """A checkpoint dir without COMMITTED (simulated mid-write crash) must
+    be invisible to restore."""
+    tree = {"x": jnp.arange(4, dtype=jnp.float32)}
+    ckpt.save(str(tmp_path), 1, tree)
+    # simulate a crash: a later step dir exists but was never committed
+    crash = tmp_path / "step_00000002"
+    crash.mkdir()
+    (crash / "manifest.json").write_text("{}")
+    assert ckpt.latest_step(str(tmp_path)) == 1
+    restored, step, _ = ckpt.restore(str(tmp_path), tree)
+    assert step == 1
+    # orphan tmp dirs are GC'd
+    (tmp_path / "step_00000009.tmp").mkdir()
+    ckpt.garbage_collect(str(tmp_path), keep_last=3)
+    assert not (tmp_path / "step_00000009.tmp").exists()
+
+
+def test_structure_mismatch_rejected(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"a": jnp.zeros((2,))})
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), {"b": jnp.zeros((2,))})
+
+
+def test_full_train_crash_resume_cycle(tmp_path):
+    """Train 3 steps -> checkpoint -> 'crash' -> resume -> identical state to
+    an uninterrupted 6-step run (bitwise, incl. the data stream)."""
+    cfg = get_smoke_config("internlm2-1.8b")
+    ocfg = OptimizerConfig(warmup_steps=1, total_steps=20)
+
+    def run(n_steps, params, opt, data):
+        for _ in range(n_steps):
+            params, opt, _ = train_step(params, opt, next(data), cfg, ocfg)
+        return params, opt
+
+    # uninterrupted
+    p0, o0 = make_train_state(cfg, jax.random.PRNGKey(0))
+    data = DataIterator(cfg, SHAPE)
+    p_ref, o_ref = run(6, p0, o0, data)
+
+    # interrupted at step 3
+    p1, o1 = make_train_state(cfg, jax.random.PRNGKey(0))
+    data1 = DataIterator(cfg, SHAPE)
+    p1, o1 = run(3, p1, o1, data1)
+    ckpt.save(str(tmp_path), 3, {"params": p1, "opt": o1},
+              extra={"data": data1.state()})
+    del p1, o1, data1                                   # "crash"
+
+    like = {"params": make_train_state(cfg, jax.random.PRNGKey(9))[0],
+            "opt": make_train_state(cfg, jax.random.PRNGKey(9))[1]}
+    restored, step, extra = ckpt.restore(str(tmp_path), like)
+    data2 = DataIterator(cfg, SHAPE)
+    data2.restore(extra["data"])
+    assert step == 3 and data2.step == 3
+    p2, o2 = run(3, restored["params"], restored["opt"], data2)
+
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ----------------------------- fault policies ------------------------------ #
+def test_assign_shards_deterministic_and_complete():
+    a = assign_shards(10, [3, 1, 2])
+    b = assign_shards(10, [2, 3, 1])
+    assert a == b
+    all_shards = sorted(s for v in a.values() for s in v)
+    assert all_shards == list(range(10))
+
+
+def test_reassign_on_failure_covers_all():
+    a = reassign_on_failure(16, list(range(4)), failed=[1])
+    assert 1 not in a
+    assert sorted(s for v in a.values() for s in v) == list(range(16))
+    # balanced within 1
+    sizes = [len(v) for v in a.values()]
+    assert max(sizes) - min(sizes) <= 1
+
+
+@given(n=st.integers(1, 64), hosts=st.sets(st.integers(0, 31), min_size=1,
+                                           max_size=16))
+@settings(max_examples=30, deadline=None)
+def test_assign_shards_property(n, hosts):
+    a = assign_shards(n, sorted(hosts))
+    assert sorted(s for v in a.values() for s in v) == list(range(n))
+    sizes = [len(v) for v in a.values()]
+    assert max(sizes) - min(sizes) <= 1
+
+
+def test_straggler_detection_and_backup():
+    pol = StragglerPolicy(threshold=2.0)
+    times = {0: [1.0] * 8, 1: [1.1] * 8, 2: [5.0] * 8, 3: [0.9] * 8}
+    stragglers = pol.detect(times)
+    assert stragglers == [2]
+    assignment = assign_shards(8, [0, 1, 2, 3])
+    backups = pol.backups(stragglers, assignment)
+    backed_up = sorted(s for v in backups.values() for s in v)
+    assert backed_up == assignment[2]
+    assert 2 not in backups
+
+
+def test_preemption_guard():
+    g = PreemptionGuard(install=False)
+    assert not g.should_stop
+    g.flag()
+    assert g.should_stop
+
+
+def test_run_with_restarts():
+    calls = {"n": 0}
+
+    def step_fn(step):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("injected failure")
+        return step + 1
+
+    final = run_with_restarts(step_fn, 0, 3, max_restarts=2)
+    assert final == 3
+    assert calls["n"] == 4          # 3 successes + 1 failure
+
+
+def test_run_with_restarts_exhausted():
+    def always_fail(step):
+        raise RuntimeError("down")
+    with pytest.raises(RuntimeError):
+        run_with_restarts(always_fail, 0, 2, max_restarts=1)

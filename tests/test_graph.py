@@ -1,0 +1,99 @@
+"""Graph generators + transition matrix + sparse container tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import generators as gen
+from repro.graph import transition as tr
+from repro.graph.sparse import BSRMatrix, CSRMatrix, ELLMatrix
+
+
+def test_erdos_renyi_basic():
+    src, dst = gen.erdos_renyi(200, avg_degree=6.0, seed=1)
+    assert src.shape == dst.shape and len(src) > 0
+    assert np.all(src != dst)
+    # symmetric: every (a,b) has (b,a)
+    s = set(zip(src.tolist(), dst.tolist()))
+    assert all((b, a) in s for a, b in s)
+
+
+def test_barabasi_albert_scale_free():
+    src, _ = gen.barabasi_albert(500, m_edges=4, seed=0)
+    deg = gen.degrees(src, 500)
+    # heavy tail: max degree far above mean
+    assert deg.max() > 4 * deg[deg > 0].mean()
+
+
+def test_protein_network_has_dangling():
+    src, dst = gen.protein_network(300, seed=2)
+    mask = tr.dangling_mask(src, 300)
+    assert mask.sum() >= 1          # isolated proteins exist
+    assert mask.sum() < 30
+
+
+def test_transition_dense_column_stochastic():
+    src, dst = gen.protein_network(100, seed=0)
+    H = np.asarray(tr.build_transition_dense(src, dst, 100))
+    np.testing.assert_allclose(H.sum(axis=0), 1.0, rtol=1e-5)
+    assert (H >= 0).all()
+
+
+def test_transition_sparse_matches_dense():
+    n = 80
+    src, dst = gen.protein_network(n, seed=3)
+    Hd = np.asarray(tr.build_transition_dense(src, dst, n,
+                                              fix_dangling=False))
+    csr = tr.build_transition_csr(src, dst, n)
+    np.testing.assert_allclose(np.asarray(csr.todense()), Hd, atol=1e-6)
+    ell = tr.build_transition_ell(src, dst, n)
+    np.testing.assert_allclose(np.asarray(ell.todense()), Hd, atol=1e-6)
+
+
+def test_csr_ell_bsr_matvec_agree():
+    n = 96
+    src, dst = gen.protein_network(n, seed=4)
+    Hd = np.asarray(tr.build_transition_dense(src, dst, n,
+                                              fix_dangling=False))
+    x = np.random.default_rng(0).normal(size=n).astype(np.float32)
+    ref = Hd @ x
+    csr = CSRMatrix.from_dense(Hd)
+    ell = ELLMatrix.from_csr(csr)
+    bsr = BSRMatrix.from_dense(Hd, bs=32)
+    np.testing.assert_allclose(np.asarray(csr.matvec(jnp.asarray(x))), ref,
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ell.matvec(jnp.asarray(x))), ref,
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(bsr.matvec(jnp.asarray(x))), ref,
+                               rtol=1e-4, atol=1e-5)
+
+
+@given(n=st.integers(10, 120), seed=st.integers(0, 10))
+@settings(max_examples=15, deadline=None)
+def test_transition_always_column_stochastic(n, seed):
+    """Property: with the dangling fix, every column sums to exactly 1."""
+    src, dst = gen.erdos_renyi(n, avg_degree=4.0, seed=seed)
+    if len(src) == 0:
+        return
+    H = np.asarray(tr.build_transition_dense(src, dst, n))
+    np.testing.assert_allclose(H.sum(axis=0), 1.0, rtol=1e-4)
+
+
+@given(bs=st.sampled_from([8, 16, 32]), n=st.integers(17, 100))
+@settings(max_examples=10, deadline=None)
+def test_bsr_roundtrip_nonaligned(bs, n):
+    """BSR handles shapes not divisible by the block size (padding)."""
+    rng = np.random.default_rng(n)
+    A = rng.normal(size=(n, n)).astype(np.float32)
+    A[A < 0.5] = 0.0                     # sparsify
+    x = rng.normal(size=n).astype(np.float32)
+    bsr = BSRMatrix.from_dense(A, bs=bs)
+    np.testing.assert_allclose(np.asarray(bsr.matvec(jnp.asarray(x))), A @ x,
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_edge_list_loader(tmp_path):
+    p = tmp_path / "edges.txt"
+    p.write_text("# comment\n0 1\n1 2\n2 0\n")
+    src, dst, n = gen.load_edge_list(str(p))
+    assert n == 3 and len(src) == 6      # symmetrized

@@ -1,0 +1,132 @@
+"""MoE invariants + expert-parallel (shard_map) vs reference equivalence."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.models import moe as moe_mod
+from repro.models.layers import init_tree
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("olmoe-1b-7b")
+    params = init_tree(moe_mod.moe_specs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    return cfg, params, x
+
+
+def test_moe_output_shape_and_finite(setup):
+    cfg, params, x = setup
+    y, aux = moe_mod.moe_reference(params, x, cfg)
+    assert y.shape == x.shape
+    assert np.isfinite(np.asarray(y)).all()
+    assert float(aux["aux_loss"]) >= 0
+    assert 0 <= float(aux["dropped_frac"]) <= 1
+
+
+def test_single_expert_equals_dense_mlp(setup):
+    """With E=1, k=1 and ample capacity, MoE == its expert MLP exactly."""
+    cfg, _, _ = setup
+    import dataclasses
+    cfg1 = dataclasses.replace(cfg, n_experts=1, experts_per_token=1,
+                               capacity_factor=4.0)
+    params = init_tree(moe_mod.moe_specs(cfg1), jax.random.PRNGKey(2))
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 8, cfg1.d_model))
+    y, aux = moe_mod.moe_reference(params, x, cfg1)
+    xt = x.reshape(-1, cfg1.d_model)
+    h = jax.nn.silu(xt @ params["wi_gate"][0]) * (xt @ params["wi_up"][0])
+    want = (h @ params["wo"][0]).reshape(x.shape)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(want), rtol=2e-3,
+                               atol=2e-3)
+    assert float(aux["dropped_frac"]) == 0.0
+
+
+def test_router_mass_conserved(setup):
+    """Without drops, combine weights per token sum to 1."""
+    cfg, params, x = setup
+    import dataclasses
+    cfg2 = dataclasses.replace(cfg, capacity_factor=8.0)
+    logits = x.reshape(-1, cfg.d_model).astype(jnp.float32) @ \
+        params["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, _ = jax.lax.top_k(probs, cfg.experts_per_token)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(jnp.sum(top_p, -1)), 1.0,
+                               rtol=1e-5)
+
+
+_EP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys; sys.path.insert(0, {src!r})
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs import get_smoke_config
+    from repro.models import moe as moe_mod
+    from repro.models import moe_ep
+    from repro.models.layers import init_tree
+    from repro.sharding import partition as P_
+    from repro.launch.mesh import make_mesh
+
+    cfg = dataclasses.replace(get_smoke_config("olmoe-1b-7b"),
+                              capacity_factor=8.0)   # no drops -> exact
+    params = init_tree(moe_mod.moe_specs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 16, cfg.d_model))
+
+    ref, aux_ref = moe_mod.moe_reference(params, x, cfg)
+
+    mesh = make_mesh((2, 4), ("data", "model"))
+    with P_.use_mesh(mesh):
+        assert moe_ep.moe_ep_applicable(cfg)
+        got, aux = moe_ep.moe_ep(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=5e-3, atol=5e-3)
+    assert abs(float(aux["aux_loss"]) - float(aux_ref["aux_loss"])) < 1e-4
+    assert float(aux["dropped_frac"]) == 0.0
+
+    # gradients flow and match the reference
+    def loss_ref(p):
+        y, a = moe_mod.moe_reference(p, x, cfg)
+        return jnp.sum(y ** 2) + a["aux_loss"]
+    def loss_ep(p):
+        with P_.use_mesh(mesh):
+            y, a = moe_ep.moe_ep(p, x, cfg)
+        return jnp.sum(y ** 2) + a["aux_loss"]
+    g_ref = jax.grad(loss_ref)(params)
+    g_ep = jax.grad(loss_ep)(params)
+    for a, b in zip(jax.tree.leaves(g_ref), jax.tree.leaves(g_ep)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-2,
+                                   atol=2e-3)
+    # padded-expert case (granite-moe: 40 experts on 4-way model axis -> 40%4==0;
+    # force a non-divisible case with 5 experts on 4 shards)
+    cfg5 = dataclasses.replace(get_smoke_config("granite-moe-3b-a800m"),
+                               capacity_factor=8.0)
+    params5 = init_tree(moe_mod.moe_specs(cfg5), jax.random.PRNGKey(2))
+    x5 = jax.random.normal(jax.random.PRNGKey(3), (4, 8, cfg5.d_model))
+    ref5, _ = moe_mod.moe_reference(params5, x5, cfg5)
+    with P_.use_mesh(mesh):
+        got5, _ = moe_ep.moe_ep(params5, x5, cfg5)
+    np.testing.assert_allclose(np.asarray(got5), np.asarray(ref5),
+                               rtol=5e-3, atol=5e-3)
+    print("MOE_EP_OK")
+""")
+
+
+@pytest.mark.slow
+def test_moe_ep_matches_reference_8dev():
+    src_dir = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _EP_SCRIPT.format(src=src_dir)], env=env,
+        capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "MOE_EP_OK" in out.stdout
