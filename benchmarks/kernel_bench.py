@@ -20,8 +20,8 @@ from repro.kernels import ref
 
 
 def _time(f, *args, reps=5):
-    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
-        f(*args).block_until_ready()
+    warm = f(*args)                     # single warmup call, reused
+    jax.tree.leaves(warm)[0].block_until_ready()
     t0 = time.time()
     for _ in range(reps):
         r = f(*args)

@@ -1,0 +1,170 @@
+"""Whole-loop PageRankEngine vs the seed's per-iteration Python-loop driver.
+
+The seed's fastest practical tier drove one jitted PageRank step per
+iteration from a host Python loop (``launch/pagerank_run.py`` pre-engine):
+an eager dangling-leak pass over the rank vector, an eager epilogue-scalar
+computation, one device dispatch, and a host sync — every iteration.  The
+engine compiles the *entire* schedule into a single ``lax.scan`` dispatch
+with the leak folded into the iteration body.
+
+This benchmark times both drivers over the same N=2048 protein network in
+the dense and ELL tiers (the Pallas kernels run in interpret mode on CPU,
+so per the acceptance criteria they are excluded from the speed claim) and
+writes ``BENCH_pagerank_engine.json`` at the repo root:
+
+* ``tiers``   — per-iteration wall time (ms) for each driver x layout,
+* ``speedup`` — python-loop / engine per-iteration ratio per tier,
+* ``max_abs_diff`` — engine results vs the ``pagerank_dense_fixed``
+  reference (the dense tier dispatches the identical program: diff 0.0).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph import generators as gen
+from repro.graph import transition as tr
+from repro.pagerank import PageRankEngine, pagerank_dense_fixed
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_pagerank_engine.json")
+
+
+def _python_loop_dense(H, n: int, iters: int, d: float):
+    """The seed driver pattern, dense tier: one jitted step + host sync per
+    iteration (dangling-fixed H, so no leak term)."""
+    step = jax.jit(lambda H, pr, t: d * (H @ pr) + t)
+    t = (1.0 - d) / n
+    pr = jnp.full((n,), 1.0 / n, jnp.float32)
+    for _ in range(iters):
+        pr = step(H, pr, t)
+        pr.block_until_ready()
+    return pr
+
+
+def _python_loop_ell(data, idx, dang, n: int, iters: int, d: float):
+    """The seed driver pattern, ELL tier — mirrors ``ops.pagerank_iteration``
+    exactly: eager leak reduction (the extra full pass over the rank
+    vector), eager epilogue scalar, jitted step, host sync per iteration."""
+    step = jax.jit(
+        lambda data, idx, pr, t: d * jnp.sum(data * pr[idx], axis=1) + t)
+    pr = jnp.full((n,), 1.0 / n, jnp.float32)
+    for _ in range(iters):
+        leak = jnp.sum(pr * dang) / n           # seed ops.py:47 extra pass
+        t = d * leak + (1.0 - d) / n
+        pr = step(data, idx, pr, t)
+        pr.block_until_ready()
+    return pr
+
+
+def _time_interleaved(fns: dict, reps: int = 5):
+    """Median wall time per entry, measured in interleaved rounds (every
+    fn once per round) so machine-load drift biases all drivers equally
+    instead of whichever block it lands on.  Returns ({name: seconds},
+    {name: last_result}); fns must already be warmed/compiled."""
+    times = {k: [] for k in fns}
+    results = {}
+    for _ in range(reps):
+        for k, fn in fns.items():
+            t0 = time.time()
+            results[k] = fn()
+            jax.tree.leaves(results[k])[0].block_until_ready()
+            times[k].append(time.time() - t0)
+    med = {k: sorted(v)[len(v) // 2] for k, v in times.items()}
+    return med, results
+
+
+def run(n: int = 2048, iters: int = 100, reps: int = 7,
+        out_path: str | None = OUT_PATH) -> dict:
+    d = 0.85
+    src, dst = gen.protein_network(n, seed=0)
+    H = tr.build_transition_dense(src, dst, n)
+    ell = tr.build_transition_ell(src, dst, n)
+    dang = jnp.asarray(tr.dangling_mask(src, n).astype(np.float32))
+
+    eng_dense = PageRankEngine(src, dst, n, d=d, backend="dense")
+    eng_ell = PageRankEngine(src, dst, n, d=d, backend="ell")
+    reference = pagerank_dense_fixed(H, n_iters=iters, d=d)
+
+    # warm every path (compile excluded from all timings)
+    _python_loop_dense(H, n, 1, d)
+    _python_loop_ell(ell.data, ell.indices, dang, n, 1, d)
+    eng_dense.run(iters).block_until_ready()
+    eng_ell.run(iters).block_until_ready()
+
+    med, res = _time_interleaved({
+        "python_loop_dense": lambda: _python_loop_dense(H, n, iters, d),
+        "engine_dense": lambda: eng_dense.run(iters),
+        "python_loop_ell": lambda: _python_loop_ell(
+            ell.data, ell.indices, dang, n, iters, d),
+        "engine_ell": lambda: eng_ell.run(iters),
+    }, reps)
+    t_pl_dense, t_en_dense = med["python_loop_dense"], med["engine_dense"]
+    t_pl_ell, t_en_ell = med["python_loop_ell"], med["engine_ell"]
+    pr_pl_dense, pr_en_dense = res["python_loop_dense"], res["engine_dense"]
+    pr_pl_ell, pr_en_ell = res["python_loop_ell"], res["engine_ell"]
+
+    per_iter = {
+        "python_loop_dense_ms": t_pl_dense / iters * 1e3,
+        "engine_dense_ms": t_en_dense / iters * 1e3,
+        "python_loop_ell_ms": t_pl_ell / iters * 1e3,
+        "engine_ell_ms": t_en_ell / iters * 1e3,
+    }
+    speedup = {
+        "dense": t_pl_dense / t_en_dense,
+        "ell": t_pl_ell / t_en_ell,
+    }
+    best_tier = max(speedup, key=speedup.get)
+    diffs = {
+        "engine_dense_vs_reference": float(
+            jnp.max(jnp.abs(pr_en_dense - reference))),
+        "engine_ell_vs_reference": float(
+            jnp.max(jnp.abs(pr_en_ell - reference))),
+        "python_loop_ell_vs_reference": float(
+            jnp.max(jnp.abs(pr_pl_ell - reference))),
+        "python_loop_dense_vs_reference": float(
+            jnp.max(jnp.abs(pr_pl_dense - reference))),
+    }
+
+    report = {
+        "n": n,
+        "iters": iters,
+        "reps_median_of": reps,
+        "device": jax.default_backend(),
+        "layouts": {
+            "python_loop_ell": f"classic ELLPACK k={ell.k} (max degree)",
+            "engine_ell": eng_ell.layout,
+        },
+        "tiers_ms_per_iter": per_iter,
+        "speedup_engine_vs_python_loop": speedup,
+        "max_abs_diff": diffs,
+        "claim": {
+            "tier": best_tier,
+            "speedup_x": speedup[best_tier],
+            "meets_5x": speedup[best_tier] >= 5.0,
+            "engine_max_diff_vs_reference": diffs[
+                f"engine_{best_tier}_vs_reference"],
+            "diff_le_1e-5": diffs[
+                f"engine_{best_tier}_vs_reference"] <= 1e-5,
+        },
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+
+    return {"name": "pagerank_engine",
+            "us_per_call": per_iter[f"engine_{best_tier}_ms"] * 1e3,
+            "derived": (f"best_tier={best_tier};"
+                        f"speedup_dense={speedup['dense']:.1f}x;"
+                        f"speedup_ell={speedup['ell']:.1f}x;"
+                        f"engine_diff={report['claim']['engine_max_diff_vs_reference']:.1e};"
+                        f"json={'written' if out_path else 'skipped'}")}
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=2))

@@ -4,6 +4,12 @@ Prints ``name,us_per_call,derived`` CSV.  The dry-run/roofline artifacts
 (64 production-mesh compiles) are produced separately by
 ``python -m repro.launch.dryrun`` (they take ~an hour); ``roofline`` here
 summarizes whatever artifacts exist.
+
+Modes:
+  --quick   smaller Fig. 6B sweep (2 sizes, 20 iters)
+  --smoke   CI mode: tiny N, 3 iterations, every tier — catches engine
+            perf-path regressions in seconds (no JSON artifact written;
+            speed claims only make sense at full size)
 """
 from __future__ import annotations
 
@@ -13,17 +19,29 @@ import sys
 def main() -> None:
     from benchmarks import (fig5_routing, fig6a_matvec_latency,
                             fig6b_pagerank_throughput, kernel_bench,
-                            roofline, table1_design)
+                            pagerank_engine_bench, roofline, table1_design)
 
-    quick = "--quick" in sys.argv
+    smoke = "--smoke" in sys.argv
+    quick = "--quick" in sys.argv or smoke
+    if smoke:
+        sizes, iters = [256], 3
+        engine_kw = dict(n=256, iters=3, reps=1, out_path=None)
+    elif quick:
+        sizes, iters = [1000, 2000], 20
+        # out_path=None: never overwrite the full-size JSON artifact with
+        # reduced-size numbers
+        engine_kw = dict(n=1024, iters=20, out_path=None)
+    else:
+        sizes, iters = None, 100
+        engine_kw = dict()
+
     benches = [
         fig5_routing.run,
         fig6a_matvec_latency.run,
-        (lambda: fig6b_pagerank_throughput.run(
-            sizes=[1000, 2000] if quick else None,
-            iters=20 if quick else 100)),
+        (lambda: fig6b_pagerank_throughput.run(sizes=sizes, iters=iters)),
         table1_design.run,
         kernel_bench.run,
+        (lambda: pagerank_engine_bench.run(**engine_kw)),
         roofline.run,
     ]
     print("name,us_per_call,derived")

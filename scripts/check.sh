@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# One-command regression gate: tier-1 pytest + benchmark smoke.
+# Perf-path regressions in the engine (backend routing, scan compilation,
+# kernel plumbing) fail here in seconds instead of at full benchmark size.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q "$@"
+python -m benchmarks.run --smoke

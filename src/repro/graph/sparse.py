@@ -63,8 +63,22 @@ class CSRMatrix:
     def nnz(self) -> int:
         return self.data.shape[0]
 
+    def row_positions(self) -> tuple[np.ndarray, np.ndarray]:
+        """Host-side (row, position-within-row) of every nnz — the scatter
+        coordinates shared by the ELL builders and the engine's split-ELL
+        layout prep."""
+        indptr = np.asarray(self.indptr)
+        counts = np.diff(indptr)
+        rows = np.repeat(np.arange(self.shape[0]), counts)
+        pos = np.arange(rows.size) - np.repeat(indptr[:-1], counts)
+        return rows, pos
+
     def matvec(self, x: jax.Array) -> jax.Array:
-        prod = self.data * x[self.indices]
+        return self.matmat(x[:, None])[:, 0]
+
+    def matmat(self, X: jax.Array) -> jax.Array:
+        """Y = A @ X for (M, Q) X — Q columns share one pass over the nnz."""
+        prod = self.data[:, None] * X[self.indices]
         return jax.ops.segment_sum(prod, self.row_ids,
                                    num_segments=self.shape[0])
 
@@ -93,10 +107,12 @@ class ELLMatrix:
         idx = np.zeros((n, kk), np.int32)
         cols = np.asarray(csr.indices)
         vals = np.asarray(csr.data)
-        for r in range(n):
-            c = min(int(counts[r]), kk)
-            data[r, :c] = vals[indptr[r]:indptr[r] + c]
-            idx[r, :c] = cols[indptr[r]:indptr[r] + c]
+        # bulk scatter: position of each nnz within its row, rows truncated
+        # at the K budget (no per-row Python loop)
+        rows, pos = csr.row_positions()
+        keep = pos < kk
+        data[rows[keep], pos[keep]] = vals[keep]
+        idx[rows[keep], pos[keep]] = cols[keep]
         return ELLMatrix(jnp.asarray(data), jnp.asarray(idx), shape=csr.shape)
 
     @property
@@ -104,7 +120,11 @@ class ELLMatrix:
         return self.data.shape[1]
 
     def matvec(self, x: jax.Array) -> jax.Array:
-        return jnp.sum(self.data * x[self.indices], axis=1)
+        return self.matmat(x[:, None])[:, 0]
+
+    def matmat(self, X: jax.Array) -> jax.Array:
+        """Y = A @ X for (M, Q) X — one gather serves all Q columns."""
+        return jnp.sum(self.data[..., None] * X[self.indices], axis=1)
 
     def todense(self) -> jax.Array:
         n, _ = self.shape
@@ -145,11 +165,14 @@ class BSRMatrix:
         mb = max(mb, 1)
         blocks = np.zeros((nb_r, mb, bs, bs), np.float32)
         bcols = np.zeros((nb_r, mb), np.int32)
-        for r in range(nb_r):
-            cols = np.nonzero(nz[r])[0][:mb]
-            for j, c in enumerate(cols):
-                blocks[r, j] = blk[r, c]
-                bcols[r, j] = c
+        # bulk scatter of nonzero blocks: np.nonzero is row-major, so the
+        # slot of each block within its row is its rank since the row start
+        r_idx, c_idx = np.nonzero(nz)
+        starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        slot = np.arange(len(r_idx)) - np.repeat(starts, counts)
+        keep = slot < mb
+        blocks[r_idx[keep], slot[keep]] = blk[r_idx[keep], c_idx[keep]]
+        bcols[r_idx[keep], slot[keep]] = c_idx[keep]
         return BSRMatrix(jnp.asarray(blocks), jnp.asarray(bcols),
                          shape=(n, m))
 
@@ -163,12 +186,17 @@ class BSRMatrix:
 
     def matvec(self, x: jax.Array) -> jax.Array:
         """Reference BSR SpMV (pure jnp; the Pallas kernel mirrors this)."""
+        return self.matmat(x[:, None])[:, 0]
+
+    def matmat(self, X: jax.Array) -> jax.Array:
+        """Y = A @ X for (M, Q) X — blocks are gathered once per sweep."""
         bs = self.block_size
         nb_r = self.blocks.shape[0]
+        q = X.shape[1]
         m_pad = self.shape[1] if self.shape[1] % bs == 0 else (
             (self.shape[1] // bs + 1) * bs)
-        xp = jnp.zeros((m_pad,), x.dtype).at[:self.shape[1]].set(x)
-        xb = xp.reshape(-1, bs)                       # (nb_c, bs)
-        gathered = xb[self.block_cols]                # (nb_r, mb, bs)
-        y = jnp.einsum("rbij,rbj->ri", self.blocks, gathered)
-        return y.reshape(nb_r * bs)[:self.shape[0]]
+        Xp = jnp.zeros((m_pad, q), X.dtype).at[:self.shape[1]].set(X)
+        xb = Xp.reshape(-1, bs, q)                    # (nb_c, bs, Q)
+        gathered = xb[self.block_cols]                # (nb_r, mb, bs, Q)
+        y = jnp.einsum("rbij,rbjq->riq", self.blocks, gathered)
+        return y.reshape(nb_r * bs, q)[:self.shape[0]]

@@ -1,8 +1,11 @@
 """Public jit'd entry points for the kernel layer.
 
-``interpret`` defaults to True because this container is CPU-only; on real
-TPU hardware set ``REPRO_PALLAS_INTERPRET=0`` (or pass ``interpret=False``)
-and the same ``pallas_call`` lowers to Mosaic.
+``interpret`` is resolved **per call** by :func:`default_interpret`: the
+Pallas kernels compile to Mosaic on TPU and fall back to interpret mode
+everywhere else, so the same process can mix compiled and interpreted
+paths (e.g. a TPU engine next to a CPU unit test).  Set
+``REPRO_PALLAS_INTERPRET=0``/``1`` to force either mode globally, or pass
+``interpret=`` explicitly.
 """
 from __future__ import annotations
 
@@ -16,24 +19,31 @@ from repro.kernels.bsr_spmv import bsr_spmv
 from repro.kernels.pagerank_step import pagerank_step
 from repro.kernels.streaming_matvec import streaming_matvec
 
-INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+def default_interpret() -> bool:
+    """Interpret-mode default for this call: env override, else derived
+    from the active device (compiled only on TPU)."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env != "0"
+    return jax.default_backend() != "tpu"
 
 
 def matvec(W: jax.Array, x: jax.Array, **kw) -> jax.Array:
     """y = W @ x via the streaming kernel (paper's MV, B=1)."""
-    kw.setdefault("interpret", INTERPRET)
+    kw.setdefault("interpret", default_interpret())
     return streaming_matvec(W, x[None, :], **kw)[0]
 
 
 def gemv_batched(W: jax.Array, X: jax.Array, **kw) -> jax.Array:
     """Y = X @ W^T — the decode-path batched GEMV."""
-    kw.setdefault("interpret", INTERPRET)
+    kw.setdefault("interpret", default_interpret())
     return streaming_matvec(W, X, **kw)
 
 
 def spmv(bsr: BSRMatrix, x: jax.Array, **kw) -> jax.Array:
     """y = H_bsr @ x, trimmed to the logical (unpadded) length."""
-    kw.setdefault("interpret", INTERPRET)
+    kw.setdefault("interpret", default_interpret())
     y = bsr_spmv(bsr.blocks, bsr.block_cols, x, **kw)
     return y[:bsr.shape[0]]
 
@@ -41,8 +51,14 @@ def spmv(bsr: BSRMatrix, x: jax.Array, **kw) -> jax.Array:
 def pagerank_iteration(H: jax.Array, pr: jax.Array,
                        dangling: jax.Array | None = None,
                        d: float = 0.85, **kw) -> jax.Array:
-    """Fused PageRank step with dangling correction."""
-    kw.setdefault("interpret", INTERPRET)
+    """Fused PageRank step with dangling correction.
+
+    One-shot convenience path: the leak is a separate pass over ``pr`` and
+    the kernel re-pads per call.  Loops should use
+    ``repro.pagerank.engine.PageRankEngine``, which prepares the layout
+    once and carries the in-kernel leak reduction between iterations.
+    """
+    kw.setdefault("interpret", default_interpret())
     n = H.shape[0]
     leak = 0.0 if dangling is None else jnp.sum(pr * dangling) / n
     t = d * leak + (1.0 - d) / n

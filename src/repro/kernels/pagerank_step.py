@@ -9,6 +9,18 @@ matvec's last reduction step — removing two full passes over the rank vector
 ``t`` carries the teleport term plus the dangling-leak correction, computed
 by the caller: ``t = d * sum(pr[dangling]) / n + (1 - d) / n`` — a scalar,
 staged through SMEM.
+
+Two variants:
+
+* :func:`pagerank_step` — convenience entry: pads on every call, trims on
+  return.  Fine for one-shot use; wasteful inside a loop.
+* :func:`pagerank_step_fused` — the engine's hot-loop kernel.  Operates on
+  a *pre-padded* layout (no ``jnp.pad``/reshape per iteration) and emits a
+  **second output**: the dangling-leak reduction ``sum(y_new * dangling)``
+  accumulated in the same epilogue that applies the affine term.  The
+  caller carries it as the next iteration's scalar ``t``, deleting the
+  separate full pass over the rank vector that
+  ``ops.pagerank_iteration`` pays every step.
 """
 from __future__ import annotations
 
@@ -67,6 +79,101 @@ def pagerank_step(H: jax.Array, pr: jax.Array, t: jax.Array, *,
         interpret=interpret,
     )(jnp.asarray(t, jnp.float32).reshape(1), Hp, xp)
     return out[0, :N]
+
+
+def _fused_kernel(t_ref, h_ref, x_ref, dang_ref, y_ref, leak_ref, *,
+                  d: float, m_steps: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when((i == 0) & (j == 0))
+    def _init_leak():
+        leak_ref[...] = jnp.zeros_like(leak_ref)
+
+    @pl.when(j == 0)
+    def _init():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+    y_ref[...] += jax.lax.dot_general(
+        x_ref[...], h_ref[...],
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == m_steps - 1)
+    def _epilogue():
+        y = jnp.float32(d) * y_ref[...] + t_ref[0]
+        y_ref[...] = y
+        # dangling-leak reduction over the *new* rank block, while the
+        # block is still resident — the second pass ops.pagerank_iteration
+        # pays per step happens here for free.
+        leak_ref[0, 0] += jnp.sum(y * dang_ref[...])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("d", "block_n", "block_m", "interpret"))
+def pagerank_step_fused(Hp: jax.Array, xp: jax.Array, dangp: jax.Array,
+                        t: jax.Array, *, d: float = 0.85,
+                        block_n: int = 256, block_m: int = 256,
+                        interpret: bool = True
+                        ) -> tuple[jax.Array, jax.Array]:
+    """One fused iteration on the **pre-padded** layout.
+
+    ``Hp``: (Np, Mp) transition matrix, both axes already multiples of the
+    block sizes (zero padding).  ``xp``: (1, Mp) rank vector, ``dangp``:
+    (1, Np) dangling mask (zero in the padded tail).  Returns
+    ``(yp, leak)`` where ``yp = d * (Hp @ xp) + t`` (still padded — the
+    padded tail holds ``t``, harmless because Hp's padded columns and
+    ``dangp``'s padded tail are zero) and ``leak = sum(yp * dangp)``, the
+    scalar the caller folds into the next iteration's ``t``.
+    """
+    Np, Mp = Hp.shape
+    bn = min(block_n, Np)
+    bm = min(block_m, Mp)
+    assert Np % bn == 0 and Mp % bm == 0, "inputs must be pre-padded"
+    grid = (Np // bn, Mp // bm)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, bm), lambda i, j, t: (i, j)),
+            pl.BlockSpec((1, bm), lambda i, j, t: (0, j)),
+            pl.BlockSpec((1, bn), lambda i, j, t: (0, i)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bn), lambda i, j, t: (0, i)),
+            pl.BlockSpec((1, 1), lambda i, j, t: (0, 0)),
+        ],
+    )
+    yp, leak = pl.pallas_call(
+        functools.partial(_fused_kernel, d=d, m_steps=grid[1]),
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((1, Np), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(t, jnp.float32).reshape(1), Hp, xp, dangp)
+    return yp, leak[0, 0]
+
+
+def pad_pagerank_operands(H: jax.Array, dangling: jax.Array | None = None, *,
+                          block_n: int = 256, block_m: int = 256
+                          ) -> tuple[jax.Array, jax.Array, int, int]:
+    """One-time layout prep for :func:`pagerank_step_fused`.
+
+    Returns ``(Hp, dangp, bn, bm)`` with zero padding up to the block grid;
+    do this once per graph so nothing in the hot loop re-pads.
+    """
+    N, M = H.shape
+    bn = min(block_n, _mult(N, 128))
+    bm = min(block_m, _mult(M, 128))
+    Np, Mp = _mult(N, bn), _mult(M, bm)
+    Hp = jnp.pad(H, ((0, Np - N), (0, Mp - M)))
+    dang = (jnp.zeros((N,), jnp.float32) if dangling is None
+            else jnp.asarray(dangling, jnp.float32))
+    dangp = jnp.pad(dang, (0, Np - N))[None, :]
+    return Hp, dangp, bn, bm
 
 
 def _mult(x: int, m: int) -> int:

@@ -7,21 +7,30 @@ never touches jax device state — smoke tests see 1 device; only
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType, Mesh
+from jax.sharding import Mesh
+
+try:                                    # jax >= 0.5
+    from jax.sharding import AxisType
+except ImportError:                     # older jax: make_mesh has no
+    AxisType = None                     # axis_types parameter
+
+
+def _axis_kwargs(n_axes: int) -> dict:
+    if AxisType is None:
+        return {}
+    return {"axis_types": (AxisType.Auto,) * n_axes}
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     """16 x 16 = 256 chips per pod; 2 x 16 x 16 = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
 
 
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]) -> Mesh:
     """Arbitrary mesh (tests, examples, elastic re-mesh)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **_axis_kwargs(len(axes)))
 
 
 def make_host_mesh() -> Mesh:

@@ -2,8 +2,10 @@
 
 Runs the protein-network analysis with every execution tier and
 cross-checks them: dense JAX, sparse (ELL + BSR-Pallas), the fabric
-simulator (small N), the fused Pallas iteration, and the analytical fabric
-timing model (the paper's 213.6 ms headline).
+simulator (small N), the whole-loop-compiled PageRankEngine (auto backend
+plus the fused Pallas tier — a single device dispatch for the entire
+power iteration, no host loop), and the analytical fabric timing model
+(the paper's 213.6 ms headline).
 
 Usage:
     python -m repro.launch.pagerank_run --nodes 5000 --iters 100
@@ -21,8 +23,8 @@ from repro.configs.pagerank_5k import full as pagerank_cfg
 from repro.core import timing
 from repro.graph import generators as gen
 from repro.graph import transition as tr
-from repro.kernels import ops
-from repro.pagerank import pagerank_dense_fixed, pagerank_sparse
+from repro.pagerank import (PageRankEngine, pagerank_dense_fixed,
+                            pagerank_sparse)
 from repro.pagerank.sparse import top_k_proteins
 
 
@@ -64,18 +66,30 @@ def run(argv=None):
     pr_ell = g(ell.data, ell.indices, dang).block_until_ready()
     results["sparse_ell_jax"] = time.time() - t0
 
-    # fused Pallas iteration tier (interpret mode on CPU)
+    # whole-loop engine, auto backend: the full schedule in ONE dispatch
+    eng = PageRankEngine(src, dst, n, d=d)
+    eng.run(n_iters=iters).block_until_ready()          # compile
+    t0 = time.time()
+    pr_eng = eng.run(n_iters=iters).block_until_ready()
+    results[f"engine_{eng.backend}"] = time.time() - t0
+    err = float(jnp.max(jnp.abs(pr_eng - pr_dense)))
+    print(f"  engine[{eng.backend}] vs dense: max|diff|={err:.2e}")
+
+    # fused-Pallas engine tier: whole loop inside one lax.scan around the
+    # fused kernel with the in-kernel dangling reduction (replaces the old
+    # per-iteration Python loop + host sync driver)
     if not args.skip_bsr:
-        pr_k = jnp.full((n,), 1.0 / n)
+        engp = PageRankEngine(src, dst, n, d=d, backend="pallas_dense")
+        k_iters = min(iters, 5) if engp.interpret else iters
+        engp.run(n_iters=k_iters).block_until_ready()   # compile
         t0 = time.time()
-        for _ in range(min(iters, 5)):          # interpret mode is slow
-            pr_k = ops.pagerank_iteration(H, pr_k, d=d)
-        results["pallas_fused_x5"] = time.time() - t0
-        ref5 = jnp.full((n,), 1.0 / n)
-        for _ in range(min(iters, 5)):
-            ref5 = d * (H @ ref5) + (1 - d) / n
-        err = float(jnp.max(jnp.abs(pr_k - ref5)))
-        print(f"  pallas fused vs dense (5 iters): max|diff|={err:.2e}")
+        pr_k = engp.run(n_iters=k_iters).block_until_ready()
+        tag = "x%d" % k_iters if engp.interpret else ""
+        results[f"engine_pallas_fused{tag}"] = time.time() - t0
+        ref_k = pagerank_dense_fixed(H, n_iters=k_iters, d=d)
+        err = float(jnp.max(jnp.abs(pr_k - ref_k)))
+        print(f"  engine[pallas_dense] vs dense ({k_iters} iters): "
+              f"max|diff|={err:.2e}")
 
     # paper's fabric model
     model_s = timing.pagerank_latency_s(n, iters)

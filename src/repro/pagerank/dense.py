@@ -3,6 +3,11 @@
 ``pagerank_dense`` iterates to an L1-residual tolerance via
 ``lax.while_loop``; ``pagerank_dense_fixed`` runs the paper's fixed
 100-iteration schedule via ``lax.scan`` (what Fig. 6B times).
+
+Both route through :func:`repro.pagerank.steps.dense_step` — the same
+arithmetic the whole-loop :class:`~repro.pagerank.engine.PageRankEngine`
+compiles; the engine's dense tier dispatches these very programs, so it is
+bit-identical to this reference.
 """
 from __future__ import annotations
 
@@ -10,6 +15,8 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
+
+from repro.pagerank.steps import dense_step
 
 
 @partial(jax.jit, static_argnames=("max_iters",))
@@ -25,7 +32,7 @@ def pagerank_dense(H: jax.Array, d: float = 0.85, tol: float = 1e-6,
 
     def body(state):
         pr, i, _ = state
-        new = d * (H @ pr) + (1.0 - d) / n
+        new = dense_step(H, pr, d)
         return new, i + 1, jnp.sum(jnp.abs(new - pr))
 
     pr, iters, res = jax.lax.while_loop(
@@ -41,7 +48,7 @@ def pagerank_dense_fixed(H: jax.Array, n_iters: int = 100,
     pr0 = jnp.full((n,), 1.0 / n, H.dtype)
 
     def body(pr, _):
-        return d * (H @ pr) + (1.0 - d) / n, None
+        return dense_step(H, pr, d), None
 
     pr, _ = jax.lax.scan(body, pr0, None, length=n_iters)
     return pr

@@ -1,0 +1,351 @@
+"""Fused on-device PageRank engine: prepare once, run the whole loop compiled.
+
+The seed drove its fastest tier from a host Python loop — one kernel
+dispatch *per iteration*, a host sync between iterations, H re-padded
+inside every call, and a separate full pass over the rank vector for the
+dangling leak.  The paper's headline number (213.6 ms for 5k nodes x 100
+iterations) comes from keeping the entire power iteration on the fabric
+with no host intervention; :class:`PageRankEngine` is the JAX analogue:
+
+* **Prepare once** — the padded/blocked layout (dense, ELL, BSR, or the
+  Pallas pre-padded dense layout) is built at construction; nothing in the
+  hot loop pads or reshapes.
+* **Whole-loop compilation** — fixed schedules run as a single
+  ``lax.scan`` and tolerance-terminated runs as a single
+  ``lax.while_loop``, so 100 iterations are one dispatch, not 100
+  dispatches + syncs.
+* **In-kernel dangling fusion** — the Pallas tier uses
+  :func:`repro.kernels.pagerank_step.pagerank_step_fused`, which emits
+  ``sum(y * dangling)`` from the same epilogue that applies the affine
+  term; the scan carries it as the next iteration's scalar ``t``, deleting
+  the per-iteration extra pass over the rank vector.
+* **Backend auto-selection** — by graph density and the active JAX
+  device (``interpret`` for the Pallas tiers is derived from the device,
+  not an import-time constant).
+* **Batched personalized PageRank** — Q personalization queries propagate
+  as one (N, Q) rank matrix sharing a single sweep over H per iteration
+  (the MELOPPR-style batching; the Pallas tier rides the already-batched
+  ``streaming_matvec``).
+
+The canonical per-iteration step functions live in
+:mod:`repro.pagerank.steps` and are shared with ``repro.pagerank.dense`` /
+``repro.pagerank.sparse``, so every tier (and every test oracle) runs
+literally the same arithmetic; the engine's dense tier dispatches the very
+same jitted ``pagerank_dense_fixed`` program as the reference, making the
+two bit-identical.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph import transition as tr
+from repro.kernels import ops as kops
+from repro.kernels.pagerank_step import (pad_pagerank_operands,
+                                         pagerank_step_fused)
+from repro.kernels.streaming_matvec import streaming_matvec
+from repro.pagerank.dense import pagerank_dense, pagerank_dense_fixed
+from repro.pagerank.steps import (dense_step, ppr_step, ppr_step_batched,
+                                  seed_matrix, sparse_step)
+
+__all__ = ["PageRankEngine", "select_backend", "dense_step", "sparse_step",
+           "ppr_step", "ppr_step_batched", "seed_matrix"]
+
+BACKENDS = ("dense", "ell", "bsr", "pallas_dense")
+
+# auto-selection thresholds on nnz / n^2
+DENSE_DENSITY = 0.25    # at/above: blocked-dense sweeps beat index chasing
+BSR_DENSITY = 0.02      # at/below (sparsity >= 98%): block-sparse rows win
+
+
+def select_backend(n: int, density: float, device: str | None = None) -> str:
+    """Pick an execution backend from graph density and the active device.
+
+    ``device`` defaults to ``jax.default_backend()`` so the same code picks
+    the Mosaic-compiled Pallas tier on TPU and the XLA tiers elsewhere.
+    """
+    device = device or jax.default_backend()
+    if density >= DENSE_DENSITY:
+        return "pallas_dense" if device == "tpu" else "dense"
+    if device == "tpu" and density <= BSR_DENSITY and n >= 256:
+        # sparsity >= 98%: MXU-aligned blocks + scalar-prefetch SpMV; on
+        # CPU the block einsum loses to the ELL gather, so TPU-only
+        return "bsr"
+    return "ell"
+
+
+# --------------------------------------------------------------------------- #
+# whole-loop compiled runners (XLA backends)                                  #
+# --------------------------------------------------------------------------- #
+def _split_ell(src: np.ndarray, dst: np.ndarray, n: int,
+               k0: int | None = None):
+    """Engine-prepared ELL layout: a tight per-row budget ``k0`` (the 90th
+    degree percentile by default) plus a COO overflow tail for the
+    power-law hub rows.  Classic full-k ELLPACK pads every row to the max
+    degree — on scale-free protein networks that is ~15x more
+    multiply-adds than the nnz; the split keeps the vectorized gather for
+    ~90% of entries and routes the tail through one ``segment_sum``."""
+    csr = tr.build_transition_csr(src, dst, n)
+    counts = np.diff(np.asarray(csr.indptr))
+    if k0 is None:
+        k0 = max(4, int(np.percentile(counts, 90))) if len(counts) else 4
+    cols = np.asarray(csr.indices)
+    vals = np.asarray(csr.data)
+    rows, pos = csr.row_positions()
+    in_ell = pos < k0
+    data = np.zeros((n, k0), np.float32)
+    idx = np.zeros((n, k0), np.int32)
+    data[rows[in_ell], pos[in_ell]] = vals[in_ell]
+    idx[rows[in_ell], pos[in_ell]] = cols[in_ell]
+    ov = ~in_ell
+    return (jnp.asarray(data), jnp.asarray(idx),
+            jnp.asarray(rows[ov], jnp.int32), jnp.asarray(cols[ov],
+                                                          jnp.int32),
+            jnp.asarray(vals[ov], jnp.float32)), k0, int(ov.sum())
+
+
+def _matvec(backend: str, operands, x: jax.Array) -> jax.Array:
+    if backend == "dense":
+        return operands[0] @ x
+    if backend == "ell":
+        data, idx, ov_r, ov_c, ov_v = operands
+        n = data.shape[0]
+        if x.ndim == 1:
+            y = jnp.sum(data * x[idx], axis=1)
+            tail = jax.ops.segment_sum(ov_v * x[ov_c], ov_r,
+                                       num_segments=n)
+        else:
+            y = jnp.sum(data[..., None] * x[idx], axis=1)
+            tail = jax.ops.segment_sum(ov_v[:, None] * x[ov_c], ov_r,
+                                       num_segments=n)
+        return y + tail
+    if backend == "bsr":
+        bsr = operands[0]
+        return bsr.matvec(x) if x.ndim == 1 else bsr.matmat(x)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+@partial(jax.jit, static_argnames=("backend", "n", "n_iters"))
+def _run_fixed(operands, dang, d, *, backend: str, n: int, n_iters: int):
+    pr0 = jnp.full((n,), 1.0 / n, jnp.float32)
+
+    def body(pr, _):
+        return sparse_step(lambda v: _matvec(backend, operands, v),
+                           pr, dang, d, n), None
+
+    pr, _ = jax.lax.scan(body, pr0, None, length=n_iters)
+    return pr
+
+
+@partial(jax.jit, static_argnames=("backend", "n", "max_iters"))
+def _run_tol(operands, dang, d, tol, *, backend: str, n: int,
+             max_iters: int):
+    pr0 = jnp.full((n,), 1.0 / n, jnp.float32)
+
+    def step(pr):
+        return sparse_step(lambda v: _matvec(backend, operands, v),
+                           pr, dang, d, n)
+
+    def cond(state):
+        _, i, res = state
+        return (res > tol) & (i < max_iters)
+
+    def body(state):
+        pr, i, _ = state
+        new = step(pr)
+        return new, i + 1, jnp.sum(jnp.abs(new - pr))
+
+    return jax.lax.while_loop(
+        cond, body, (pr0, jnp.int32(0), jnp.float32(jnp.inf)))
+
+
+@partial(jax.jit, static_argnames=("backend", "n", "n_iters"))
+def _run_ppr(operands, dang, V, d, *, backend: str, n: int, n_iters: int):
+    if backend == "dense":
+        # the dense operand is the dangling-FIXED H (uniform 1/n leak
+        # folded into the dangling columns — right for global PageRank,
+        # wrong for PPR where the leak teleports to V).  Zeroing those
+        # columns reconstructs the unfixed H exactly; hoisted out of the
+        # scan as a loop invariant.
+        H = operands[0] * (1.0 - dang)[None, :]
+        mv = lambda X: H @ X
+    else:
+        mv = lambda X: _matvec(backend, operands, X)
+
+    def body(PR, _):
+        return ppr_step_batched(mv, PR, V, dang, d), None
+
+    PR, _ = jax.lax.scan(body, V, None, length=n_iters)
+    return PR
+
+
+# --------------------------------------------------------------------------- #
+# whole-loop compiled runners (Pallas pre-padded dense tier)                  #
+# --------------------------------------------------------------------------- #
+@partial(jax.jit, static_argnames=("n", "n_iters", "d", "block_n",
+                                   "block_m", "interpret"))
+def _run_fixed_pallas(Hp, dangp, *, n: int, n_iters: int, d: float,
+                      block_n: int, block_m: int, interpret: bool):
+    Mp = Hp.shape[1]
+    xp0 = jnp.pad(jnp.full((n,), 1.0 / n, jnp.float32), (0, Mp - n))[None, :]
+    t0 = d * jnp.sum(xp0 * dangp) / n + (1.0 - d) / n
+
+    def body(carry, _):
+        xp, t = carry
+        yp, leak = pagerank_step_fused(Hp, xp, dangp, t, d=d,
+                                       block_n=block_n, block_m=block_m,
+                                       interpret=interpret)
+        return (yp, d * leak / n + (1.0 - d) / n), None
+
+    (yp, _), _ = jax.lax.scan(body, (xp0, t0), None, length=n_iters)
+    return yp[0, :n]
+
+
+@partial(jax.jit, static_argnames=("n", "max_iters", "d", "block_n",
+                                   "block_m", "interpret"))
+def _run_tol_pallas(Hp, dangp, tol, *, n: int, max_iters: int, d: float,
+                    block_n: int, block_m: int, interpret: bool):
+    Mp = Hp.shape[1]
+    xp0 = jnp.pad(jnp.full((n,), 1.0 / n, jnp.float32), (0, Mp - n))[None, :]
+    t0 = d * jnp.sum(xp0 * dangp) / n + (1.0 - d) / n
+
+    def cond(state):
+        _, _, i, res = state
+        return (res > tol) & (i < max_iters)
+
+    def body(state):
+        xp, t, i, _ = state
+        yp, leak = pagerank_step_fused(Hp, xp, dangp, t, d=d,
+                                       block_n=block_n, block_m=block_m,
+                                       interpret=interpret)
+        res = jnp.sum(jnp.abs(yp[0, :n] - xp[0, :n]))
+        return yp, d * leak / n + (1.0 - d) / n, i + 1, res
+
+    xp, _, iters, res = jax.lax.while_loop(
+        cond, body, (xp0, t0, jnp.int32(0), jnp.float32(jnp.inf)))
+    return xp[0, :n], iters, res
+
+
+@partial(jax.jit, static_argnames=("n", "n_iters", "d", "block_n",
+                                   "block_m", "interpret"))
+def _run_ppr_pallas(Hp, dangp, Vp, *, n: int, n_iters: int, d: float,
+                    block_n: int, block_m: int, interpret: bool):
+    # Vp: (Q, Np) — queries ride the batch axis of streaming_matvec, so all
+    # Q teleport distributions share one sweep over Hp per iteration.
+    def body(PR, _):
+        leak = jnp.sum(PR * dangp, axis=1)                # (Q,)
+        Y = streaming_matvec(Hp, PR, block_n=block_n, block_m=block_m,
+                             interpret=interpret)
+        return d * (Y + Vp * leak[:, None]) + (1.0 - d) * Vp, None
+
+    PR, _ = jax.lax.scan(body, Vp, None, length=n_iters)
+    return PR[:, :n].T                                    # (n, Q)
+
+
+# --------------------------------------------------------------------------- #
+# the engine                                                                  #
+# --------------------------------------------------------------------------- #
+class PageRankEngine:
+    """Prepared, whole-loop-compiled PageRank over one graph.
+
+    Build it once per graph from the COO edge list; every ``run`` /
+    ``run_tol`` / ``ppr`` call is a single device dispatch.  Backends:
+
+    * ``"dense"``        — dangling-fixed dense H, XLA matmul sweep.
+    * ``"ell"``          — engine-prepared split ELLPACK: a tight per-row
+      budget (``ell_k``, default 90th degree percentile) + a COO overflow
+      tail for hub rows, so the hot loop doesn't pay max-degree padding.
+    * ``"bsr"``          — MXU-aligned block-sparse rows, explicit leak.
+    * ``"pallas_dense"`` — pre-padded dense layout through the fused
+      Pallas kernel with the in-kernel dangling reduction.
+    * ``"auto"``         — :func:`select_backend` by density + device.
+    """
+
+    def __init__(self, src: np.ndarray, dst: np.ndarray, n: int, *,
+                 d: float = 0.85, backend: str = "auto",
+                 block_n: int = 256, block_m: int = 256,
+                 bsr_block_size: int = 128, ell_k: int | None = None,
+                 interpret: bool | None = None):
+        self.n = int(n)
+        self.d = float(d)
+        src = np.asarray(src)
+        dst = np.asarray(dst)
+        self.n_edges = int(len(src))
+        self.density = self.n_edges / float(self.n * self.n)
+        self.interpret = (kops.default_interpret() if interpret is None
+                          else bool(interpret))
+        self.backend = (select_backend(self.n, self.density)
+                        if backend == "auto" else backend)
+        if self.backend not in BACKENDS:
+            raise ValueError(
+                f"backend {self.backend!r} not in {BACKENDS + ('auto',)}")
+
+        self._dang = jnp.asarray(tr.dangling_mask(src, n).astype(np.float32))
+        self._block = (block_n, block_m)
+        self.layout = self.backend
+        if self.backend == "dense":
+            self._operands = (tr.build_transition_dense(src, dst, n),)
+        elif self.backend == "ell":
+            self._operands, k0, ov_nnz = _split_ell(src, dst, n, k0=ell_k)
+            self.layout = f"ell(k0={k0})+overflow(nnz={ov_nnz})"
+        elif self.backend == "bsr":
+            self._operands = (tr.build_transition_bsr(src, dst, n,
+                                                      bs=bsr_block_size),)
+        else:                                   # pallas_dense
+            H = tr.build_transition_dense(src, dst, n, fix_dangling=False)
+            Hp, dangp, bn, bm = pad_pagerank_operands(
+                H, self._dang, block_n=block_n, block_m=block_m)
+            self._operands = (Hp, dangp)
+            self._block = (bn, bm)
+
+    # ------------------------------ queries ------------------------------ #
+    def run(self, n_iters: int = 100) -> jax.Array:
+        """Fixed-schedule power iteration; one compiled dispatch."""
+        if self.backend == "pallas_dense":
+            Hp, dangp = self._operands
+            return _run_fixed_pallas(
+                Hp, dangp, n=self.n, n_iters=n_iters, d=self.d,
+                block_n=self._block[0], block_m=self._block[1],
+                interpret=self.interpret)
+        if self.backend == "dense":
+            # the reference program itself -> bit-identical to it
+            return pagerank_dense_fixed(self._operands[0], n_iters=n_iters,
+                                        d=self.d)
+        return _run_fixed(self._operands, self._dang, self.d,
+                          backend=self.backend, n=self.n, n_iters=n_iters)
+
+    def run_tol(self, tol: float = 1e-6, max_iters: int = 1000):
+        """Tolerance-terminated power iteration; one compiled dispatch.
+        Returns ``(pr, n_iters, residual)``."""
+        if self.backend == "pallas_dense":
+            Hp, dangp = self._operands
+            return _run_tol_pallas(
+                Hp, dangp, jnp.float32(tol), n=self.n, max_iters=max_iters,
+                d=self.d, block_n=self._block[0], block_m=self._block[1],
+                interpret=self.interpret)
+        if self.backend == "dense":
+            return pagerank_dense(self._operands[0], d=self.d, tol=tol,
+                                  max_iters=max_iters)
+        return _run_tol(self._operands, self._dang, self.d,
+                        jnp.float32(tol), backend=self.backend, n=self.n,
+                        max_iters=max_iters)
+
+    def ppr(self, seed_sets: Sequence[np.ndarray],
+            n_iters: int = 100) -> jax.Array:
+        """Batched personalized PageRank: one (N, Q) propagation for Q
+        per-user seed sets; returns the (N, Q) rank matrix."""
+        V = seed_matrix(self.n, seed_sets)
+        if self.backend == "pallas_dense":
+            Hp, dangp = self._operands
+            Vp = np.zeros((V.shape[1], Hp.shape[1]), np.float32)
+            Vp[:, :self.n] = V.T
+            return _run_ppr_pallas(
+                Hp, dangp, jnp.asarray(Vp), n=self.n, n_iters=n_iters,
+                d=self.d, block_n=self._block[0], block_m=self._block[1],
+                interpret=self.interpret)
+        return _run_ppr(self._operands, self._dang, jnp.asarray(V), self.d,
+                        backend=self.backend, n=self.n, n_iters=n_iters)

@@ -7,14 +7,19 @@ dangling correction:
 
 which equals the dense-H update exactly (tests cross-check).  Works with any
 container exposing ``.matvec`` (CSR / ELL / BSR / the Pallas-backed ops).
+
+The per-iteration bodies are the shared steps from
+:mod:`repro.pagerank.steps`, so these loops and the whole-loop-compiled
+:class:`~repro.pagerank.engine.PageRankEngine` run the same arithmetic.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro.pagerank.steps import ppr_step, sparse_step
 
 
 def pagerank_sparse(matvec: Callable[[jax.Array], jax.Array], n: int,
@@ -30,9 +35,7 @@ def pagerank_sparse(matvec: Callable[[jax.Array], jax.Array], n: int,
             else jnp.asarray(dangling, jnp.float32))
 
     def body(pr, _):
-        leak = jnp.sum(pr * dang) / n
-        new = d * (matvec(pr) + leak) + (1.0 - d) / n
-        return new, None
+        return sparse_step(matvec, pr, dang, d, n), None
 
     pr, _ = jax.lax.scan(body, pr0, None, length=n_iters)
     return pr
@@ -52,8 +55,7 @@ def pagerank_sparse_tol(matvec: Callable[[jax.Array], jax.Array], n: int,
 
     def body(state):
         pr, i, _ = state
-        leak = jnp.sum(pr * dang) / n
-        new = d * (matvec(pr) + leak) + (1.0 - d) / n
+        new = sparse_step(matvec, pr, dang, d, n)
         return new, i + 1, jnp.sum(jnp.abs(new - pr))
 
     return jax.lax.while_loop(cond, body,
@@ -82,9 +84,7 @@ def personalized_pagerank(matvec: Callable[[jax.Array], jax.Array], n: int,
             else jnp.asarray(dangling, jnp.float32))
 
     def body(pr, _):
-        leak = jnp.sum(pr * dang)
-        new = d * (matvec(pr) + leak * v) + (1.0 - d) * v
-        return new, None
+        return ppr_step(matvec, pr, v, dang, d), None
 
     pr, _ = jax.lax.scan(body, pr0, None, length=n_iters)
     return pr

@@ -1,3 +1,5 @@
-from repro.serve.engine import Request, ServeEngine, batched_decode_fn
+from repro.serve.engine import (PageRankQueryEngine, PPRQuery, Request,
+                                ServeEngine, batched_decode_fn)
 
-__all__ = ["Request", "ServeEngine", "batched_decode_fn"]
+__all__ = ["Request", "ServeEngine", "batched_decode_fn",
+           "PageRankQueryEngine", "PPRQuery"]

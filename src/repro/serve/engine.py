@@ -19,6 +19,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models import model as M
+from repro.pagerank.engine import PageRankEngine
+from repro.pagerank.sparse import top_k_proteins
 
 
 @dataclasses.dataclass
@@ -135,3 +137,65 @@ def batched_decode_fn(cfg: ModelConfig) -> Callable:
     def step(params, batch, cache):
         return M.decode_step(params, batch, cache, cfg)
     return step
+
+
+@dataclasses.dataclass
+class PPRQuery:
+    uid: int
+    seeds: np.ndarray             # int indices of the user's seed proteins
+    top_k: int = 10
+    result: tuple | None = None   # (indices, scores) once served
+
+
+class PageRankQueryEngine:
+    """Multi-user personalized-PageRank serving over one prepared graph.
+
+    The graph-analytics analogue of the token engine above: per-user seed
+    sets queue up and are flushed as **one** batched (N, Q) propagation
+    through :class:`~repro.pagerank.engine.PageRankEngine` — Q queries
+    share each sweep over H instead of paying Q independent power
+    iterations (the MELOPPR batching).  Host logic is only the queue; the
+    device work is a single whole-loop-compiled dispatch per flush.
+    """
+
+    def __init__(self, engine: PageRankEngine, n_iters: int = 100,
+                 max_batch: int = 8):
+        self.engine = engine
+        self.n_iters = n_iters
+        self.max_batch = max_batch
+        self._queue: list[PPRQuery] = []
+
+    def submit(self, uid: int, seeds, top_k: int = 10) -> PPRQuery:
+        """Queue one user's query; flushed automatically at ``max_batch``.
+        Rejects bad seed sets here, before they can poison a batch."""
+        seeds = np.unique(np.asarray(seeds, np.int64).ravel())
+        if seeds.size == 0:
+            raise ValueError(f"uid {uid}: empty seed set")
+        if seeds.min() < 0 or seeds.max() >= self.engine.n:
+            raise ValueError(f"uid {uid}: seed index out of range "
+                             f"[0, {self.engine.n})")
+        q = PPRQuery(uid, seeds, top_k)
+        self._queue.append(q)
+        if len(self._queue) >= self.max_batch:
+            self.flush()
+        return q
+
+    def flush(self) -> list[PPRQuery]:
+        """Serve every queued query with one batched device dispatch."""
+        batch, self._queue = self._queue, []
+        if not batch:
+            return []
+        PPR = self.engine.ppr([q.seeds for q in batch],
+                              n_iters=self.n_iters)        # (N, Q)
+        for j, q in enumerate(batch):
+            idx, scores = top_k_proteins(PPR[:, j], k=q.top_k)
+            q.result = (np.asarray(idx), np.asarray(scores))
+        return batch
+
+    def query_batch(self, seed_sets, top_k: int = 10) -> list[tuple]:
+        """One-shot convenience: serve ``seed_sets`` now, return per-user
+        ``(indices, scores)`` ranked top-k."""
+        queries = [self.submit(uid, s, top_k=top_k)
+                   for uid, s in enumerate(seed_sets)]
+        self.flush()
+        return [q.result for q in queries]

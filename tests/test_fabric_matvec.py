@@ -19,8 +19,8 @@ from repro.core import fabric_matvec as fm
 
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_matvec_single_device():
@@ -59,8 +59,8 @@ _SUBPROCESS_SCRIPT = textwrap.dedent("""
     from jax.sharding import NamedSharding, PartitionSpec as P
     from repro.core import fabric_matvec as fm
 
-    mesh = jax.make_mesh((4, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((4, 4), ("data", "model"))
     N = 32
     A = jax.random.normal(jax.random.PRNGKey(0), (N, N))
     x = jax.random.normal(jax.random.PRNGKey(1), (N,))

@@ -12,7 +12,9 @@ from repro.kernels.pagerank_step import pagerank_step
 from repro.kernels.streaming_matvec import streaming_matvec
 
 TOL = dict(rtol=2e-3, atol=2e-3)        # bf16 inputs, f32 accumulation
-TOL32 = dict(rtol=1e-5, atol=1e-5)
+# f32: blocked kernel accumulation order differs from the oracle's single
+# dot; 512-length reductions land ~1.5e-5 apart on CPU, so atol > 1e-5
+TOL32 = dict(rtol=1e-5, atol=5e-5)
 
 
 # --------------------------------------------------------------------------- #

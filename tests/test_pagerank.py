@@ -114,8 +114,8 @@ _DIST_SCRIPT = textwrap.dedent("""
     n = 128
     src, dst = gen.protein_network(n, seed=11)
     H = np.asarray(tr.build_transition_dense(src, dst, n))
-    mesh = jax.make_mesh((4, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((4, 4), ("data", "model"))
     Hd = make_sharded_inputs_dense(jnp.asarray(H), mesh)
     pr = pagerank_distributed(Hd, mesh, n_iters=60)
     ref = pagerank_dense_fixed(jnp.asarray(H), n_iters=60)

@@ -42,8 +42,8 @@ def test_inference_rules_weight_stationary():
 
 def test_fitted_pspec_drops_nondivisible(monkeypatch):
     """kv_heads=8 on a 16-way model axis must fall back to replication."""
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
 
     class FakeMesh:
         axis_names = ("data", "model")
