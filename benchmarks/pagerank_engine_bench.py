@@ -15,7 +15,13 @@ writes ``BENCH_pagerank_engine.json`` at the repo root:
 * ``tiers``   — per-iteration wall time (ms) for each driver x layout,
 * ``speedup`` — python-loop / engine per-iteration ratio per tier,
 * ``max_abs_diff`` — engine results vs the ``pagerank_dense_fixed``
-  reference (the dense tier dispatches the identical program: diff 0.0).
+  reference (the dense tier dispatches the identical program: diff 0.0),
+* ``sharded`` — when the process sees >1 device (run under
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` on CPU), the
+  sharded mesh tiers: per-iteration time, layout, and drift vs the
+  single-device reference.  Virtual CPU devices share one physical
+  socket, so these times measure collective-schedule overhead, not
+  speedup — the accuracy parity is the claim; speed needs real chips.
 """
 from __future__ import annotations
 
@@ -131,6 +137,32 @@ def run(n: int = 2048, iters: int = 100, reps: int = 7,
             jnp.max(jnp.abs(pr_pl_dense - reference))),
     }
 
+    # sharded mesh tiers: parity + per-iteration cost on whatever device
+    # topology this process sees
+    if jax.device_count() > 1:
+        engines = {b: PageRankEngine(src, dst, n, d=d, backend=b)
+                   for b in ("dense_sharded", "ell_sharded")}
+        for e in engines.values():
+            e.run(iters).block_until_ready()            # compile
+        med_s, res_s = _time_interleaved(
+            {b: (lambda e=e: e.run(iters)) for b, e in engines.items()},
+            reps)
+        sharded = {
+            "n_devices": jax.device_count(),
+            "note": ("virtual CPU devices share one socket: parity is the "
+                     "claim, wall time measures collective overhead only"),
+            "tiers_ms_per_iter": {b: med_s[b] / iters * 1e3
+                                  for b in engines},
+            "layouts": {b: e.layout for b, e in engines.items()},
+            "max_abs_diff": {
+                f"engine_{b}_vs_reference": float(
+                    jnp.max(jnp.abs(res_s[b] - reference)))
+                for b in engines},
+        }
+    else:
+        sharded = {"skipped": "single device — set XLA_FLAGS="
+                              "--xla_force_host_platform_device_count=8"}
+
     report = {
         "n": n,
         "iters": iters,
@@ -143,6 +175,7 @@ def run(n: int = 2048, iters: int = 100, reps: int = 7,
         "tiers_ms_per_iter": per_iter,
         "speedup_engine_vs_python_loop": speedup,
         "max_abs_diff": diffs,
+        "sharded": sharded,
         "claim": {
             "tier": best_tier,
             "speedup_x": speedup[best_tier],

@@ -1,10 +1,14 @@
-"""Pod-scale distributed PageRank — the paper's fabric schedule as real
-collectives, on 16 simulated devices (the same code path the 512-chip
-dry-run compiles).
+"""Pod-scale distributed PageRank through the one engine front door — the
+paper's fabric schedule as real collectives, on 16 simulated devices (the
+same code path the 512-chip dry-run compiles).
 
 The vertical bus is the ``P('model')`` layout of the rank vector, the
 horizontal bus is the ``psum`` over the mesh row, and the adder-column
-re-injection is the diagonal broadcast (DESIGN.md §2).
+re-injection is the diagonal broadcast (DESIGN.md §2).  Since PR 3 the
+whole thing is a :class:`~repro.pagerank.engine.PageRankEngine` backend:
+``dense_sharded`` builds the blocked ``NamedSharding`` layout once and
+compiles the 100-iteration schedule into a single dispatch; the same
+engine serves query-sharded batched PPR to ``PageRankQueryEngine``.
 
 Run:  PYTHONPATH=src python examples/distributed_pagerank.py
 """
@@ -13,16 +17,12 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=16"
 
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.graph import generators as gen
-from repro.graph import transition as tr
 from repro.launch.mesh import make_mesh
-from repro.pagerank.dense import pagerank_dense_fixed
-from repro.pagerank.distributed import (make_sharded_inputs_dense,
-                                        pagerank_distributed)
+from repro.graph import generators as gen
+from repro.pagerank import PageRankEngine
+from repro.serve import PageRankQueryEngine
 
 
 def main() -> None:
@@ -31,27 +31,39 @@ def main() -> None:
     print(f"mesh: {mesh.shape} over {mesh.size} devices")
 
     src, dst = gen.protein_network(n, seed=3)
-    H = tr.build_transition_dense(src, dst, n)
-    Hd = make_sharded_inputs_dense(H, mesh)
-    print(f"H: {H.shape} sharded P('data','model') -> "
-          f"{Hd.sharding.shard_shape(H.shape)} per device")
+    eng = PageRankEngine(src, dst, n, backend="dense_sharded", mesh=mesh)
+    H_sharded = eng.operands[0]
+    print(f"H: {H_sharded.shape} sharded P('data','model') -> "
+          f"{H_sharded.sharding.shard_shape(H_sharded.shape)} per device "
+          f"[{eng.layout}]")
 
-    f = jax.jit(lambda H: pagerank_distributed(H, mesh, n_iters=iters))
-    pr = f(Hd).block_until_ready()
+    eng.run(n_iters=iters).block_until_ready()          # compile
     t0 = time.time()
-    pr = f(Hd).block_until_ready()
+    pr = eng.run(n_iters=iters).block_until_ready()
     dt = time.time() - t0
 
-    ref = pagerank_dense_fixed(H, n_iters=iters)
+    ref = PageRankEngine(src, dst, n, backend="dense").run(n_iters=iters)
     np.testing.assert_allclose(np.asarray(pr), np.asarray(ref), rtol=2e-4,
                                atol=1e-8)
-    txt = f.lower(Hd).compile().as_text()
+    txt = eng.lower_run(n_iters=iters).compile().as_text()
     n_ar = txt.count(" all-reduce(") + txt.count(" all-reduce-start(")
     print(f"{iters} fabric-schedule iterations: {dt * 1e3:.1f} ms "
           f"(16 simulated devices, CPU)")
     print(f"collectives in compiled HLO: all-reduce x{n_ar} "
           f"(horizontal bus + diagonal re-injection)")
     print(f"distributed == single-device reference: OK")
+
+    # the same prepared engine serves multi-user personalized PageRank with
+    # the (N, Q) batch sharded over the mesh's query axis
+    qe = PageRankQueryEngine(eng, n_iters=40, max_batch=8)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    results = qe.query_batch(
+        [rng.choice(n, size=3, replace=False) for _ in range(8)], top_k=5)
+    dt = time.time() - t0
+    print(f"8-user PPR batch, query-sharded over the mesh: "
+          f"{dt * 1e3:.1f} ms -> top-1 proteins "
+          f"{[int(idx[0]) for idx, _ in results]}")
 
 
 if __name__ == "__main__":

@@ -1,24 +1,39 @@
 """Pod-scale distributed PageRank — the paper's workload on the TPU mesh.
 
-Two production layouts:
+Two production layouts, each in a fixed-schedule and a tolerance-terminated
+variant, plus the query-sharded batched-PPR schedules that back the
+``dense_sharded`` / ``ell_sharded`` tiers of
+:class:`repro.pagerank.engine.PageRankEngine`:
 
-* :func:`pagerank_distributed` — dense H sharded ``P(row, col)`` over the 2-D
-  mesh, iterating the paper's fabric schedule (vertical-bus all-gather ->
-  local MV -> horizontal-bus psum -> diagonal re-injection).  This is the
-  direct pod-scale analogue of Fig. 3/Fig. 4 and what the dry-run lowers for
-  the ``pagerank_65k`` config.
+* :func:`pagerank_distributed` / :func:`pagerank_distributed_tol` — dense H
+  sharded ``P(row, col)`` over the 2-D mesh, iterating the paper's fabric
+  schedule (vertical-bus all-gather -> local MV -> horizontal-bus psum ->
+  diagonal re-injection).  This is the direct pod-scale analogue of
+  Fig. 3/Fig. 4 and what the dry-run lowers for the ``pagerank_65k`` config.
 
-* :func:`pagerank_distributed_sparse` — ELL rows sharded over the flattened
-  mesh (1-D row distribution), rank vector replicated, one ``all_gather``
-  per iteration.  This is the realistic layout for sparse interactomes where
-  N >> nnz/N.
+* :func:`pagerank_distributed_sparse` /
+  :func:`pagerank_distributed_sparse_tol` — ELL rows sharded over the
+  flattened mesh (1-D row distribution), rank vector replicated, one
+  ``all_gather`` per iteration.  This is the realistic layout for sparse
+  interactomes where N >> nnz/N.
 
-Both run under a single ``jit`` with ``lax.scan`` over iterations so XLA can
-pipeline collectives across iterations.
+* :func:`ppr_distributed_dense` / :func:`ppr_distributed_sparse` — the
+  batched (N, Q) personalized-PageRank matrix sharded over the **query**
+  axis, so a multi-user serve batch spreads across the mesh; the dense
+  variant also row-parallelizes the sweep (one row-axis ``all_gather`` per
+  iteration), the sparse variant replicates the small ELL operands and runs
+  with zero per-iteration collectives.
+
+Uneven shapes are handled by zero-padding: every entry point takes
+``n_true`` (the real node count) and keeps the PageRank arithmetic —
+``1/n`` teleports, the dangling leak, residuals — on the real nodes only.
+Padded rows/columns of H are zero, so pad entries never feed back into real
+ranks; callers slice ``[:n_true]``.
+
+All loops run under a single ``jit`` with ``lax.scan`` / ``lax.while_loop``
+over iterations so XLA can pipeline collectives across iterations.
 """
 from __future__ import annotations
-
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -26,62 +41,231 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import fabric_matvec as fm
 from repro.core.fabric_matvec import shard_map
+from repro.pagerank.steps import ppr_step_batched
+
+
+def _pr0(n: int, n_true: int, dtype=jnp.float32) -> jax.Array:
+    """Uniform 1/n_true on the real nodes, exactly 0 on the pad tail."""
+    return jnp.where(jnp.arange(n) < n_true,
+                     jnp.asarray(1.0 / n_true, dtype), 0).astype(dtype)
+
+
+def _real_mask(n: int, n_true: int, dtype=jnp.float32) -> jax.Array:
+    return (jnp.arange(n) < n_true).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# dense fabric schedule (2-D mesh)                                            #
+# --------------------------------------------------------------------------- #
+def _dense_iter(H, pr, dangling, mesh, row_axis, col_axis, d, nt):
+    """The canonical fabric-schedule iteration, shared by the fixed and
+    tolerance-terminated variants so the arithmetic (and hence the float
+    result) is defined in one place.  The leak term is the fabric analogue
+    of the adder-column epilogue; ``dangling`` is a proper argument now —
+    the seed closed over a name assigned *after* the closure def (it
+    worked only because tracing happened later, and no caller ever
+    exercised the dangling branch; tests/test_engine_sharded.py does)."""
+    y = fm.matvec(H, pr, mesh, row_axis, col_axis)
+    leak = 0.0 if dangling is None else jnp.sum(pr * dangling) / nt
+    y = d * (y + leak) + (1.0 - d) / nt
+    return fm.matvec_iterated_reshard(y, mesh, row_axis, col_axis)
 
 
 def pagerank_distributed(H: jax.Array, mesh: Mesh, n_iters: int = 100,
                          d: float = 0.85, row_axis: str = "data",
                          col_axis: str = "model",
-                         dangling: jax.Array | None = None) -> jax.Array:
+                         dangling: jax.Array | None = None,
+                         n_true: int | None = None) -> jax.Array:
     """Dense fabric-schedule PageRank.  H: (N, N) sharded P(row, col);
-    returns PR (N,) sharded P(col) (vertical-bus layout)."""
+    returns PR (N,) sharded P(col) (vertical-bus layout).
+
+    With ``dangling`` given, H must be the *unfixed* transition matrix and
+    the leak is applied as an explicit scalar (the fabric analogue of the
+    adder-column epilogue); with ``dangling=None`` H must be dangling-fixed.
+    """
     n = H.shape[0]
+    nt = int(n if n_true is None else n_true)
 
     def one_iter(pr, _):
-        y = fm.matvec(H, pr, mesh, row_axis, col_axis)
-        if dangling is not None:
-            leak = jnp.sum(pr * dangling_col) / n
-        else:
-            leak = 0.0
-        y = d * (y + leak) + (1.0 - d) / n
-        return fm.matvec_iterated_reshard(y, mesh, row_axis, col_axis), None
+        return _dense_iter(H, pr, dangling, mesh, row_axis, col_axis,
+                           d, nt), None
 
-    dangling_col = dangling
     pr0 = jax.lax.with_sharding_constraint(
-        jnp.full((n,), 1.0 / n, H.dtype), NamedSharding(mesh, P(col_axis)))
+        _pr0(n, nt, H.dtype), NamedSharding(mesh, P(col_axis)))
     pr, _ = jax.lax.scan(one_iter, pr0, None, length=n_iters)
     return pr
+
+
+def pagerank_distributed_tol(H: jax.Array, mesh: Mesh, tol: float = 1e-6,
+                             max_iters: int = 1000, d: float = 0.85,
+                             row_axis: str = "data", col_axis: str = "model",
+                             dangling: jax.Array | None = None,
+                             n_true: int | None = None):
+    """Tolerance-terminated fabric-schedule PageRank; the L1 residual is a
+    replicated scalar, so every device exits the ``while_loop`` on the same
+    iteration.  Returns ``(pr, n_iters, residual)``."""
+    n = H.shape[0]
+    nt = int(n if n_true is None else n_true)
+    mask = jax.lax.with_sharding_constraint(
+        _real_mask(n, nt, H.dtype), NamedSharding(mesh, P(col_axis)))
+
+    def step(pr):
+        return _dense_iter(H, pr, dangling, mesh, row_axis, col_axis, d, nt)
+
+    def cond(state):
+        _, i, res = state
+        return (res > tol) & (i < max_iters)
+
+    def body(state):
+        pr, i, _ = state
+        new = step(pr)
+        return new, i + 1, jnp.sum(jnp.abs(new - pr) * mask)
+
+    pr0 = jax.lax.with_sharding_constraint(
+        _pr0(n, nt, H.dtype), NamedSharding(mesh, P(col_axis)))
+    return jax.lax.while_loop(
+        cond, body, (pr0, jnp.int32(0), jnp.asarray(jnp.inf, H.dtype)))
+
+
+# --------------------------------------------------------------------------- #
+# sparse row-sharded schedule (flattened mesh)                                #
+# --------------------------------------------------------------------------- #
+def _ell_block_iter(data_blk, idx_blk, pr, dang_full, axes, d, nt):
+    """Canonical row-sharded ELL iteration (local rows -> leak -> damp ->
+    tiled all_gather), shared by the fixed and tolerance variants."""
+    y_blk = jnp.sum(data_blk * pr[idx_blk], axis=1)
+    leak = jnp.sum(pr * dang_full) / nt
+    y_blk = d * (y_blk + leak) + (1.0 - d) / nt
+    return jax.lax.all_gather(y_blk, axes, tiled=True)
 
 
 def pagerank_distributed_sparse(ell_data: jax.Array, ell_idx: jax.Array,
                                 mesh: Mesh, n_iters: int = 100,
                                 d: float = 0.85,
                                 dangling: jax.Array | None = None,
-                                axes: tuple[str, ...] = ("data", "model")
-                                ) -> jax.Array:
+                                axes: tuple[str, ...] = ("data", "model"),
+                                n_true: int | None = None) -> jax.Array:
     """Row-sharded ELL PageRank.  ``ell_data``/``ell_idx``: (N, K) sharded
     over rows on the flattened mesh axes; PR replicated.  One tiled
     ``all_gather`` of the fresh row-shards per iteration."""
     n = ell_data.shape[0]
+    nt = int(n if n_true is None else n_true)
     dang = (jnp.zeros((n,), jnp.float32) if dangling is None
             else jnp.asarray(dangling, jnp.float32))
 
     def kernel(data_blk, idx_blk, dang_full):
-        pr0 = jnp.full((n,), 1.0 / n, jnp.float32)
-
         def one_iter(pr, _):
-            y_blk = jnp.sum(data_blk * pr[idx_blk], axis=1)   # local rows
-            leak = jnp.sum(pr * dang_full) / n
-            y_blk = d * (y_blk + leak) + (1.0 - d) / n
-            pr_new = jax.lax.all_gather(y_blk, axes, tiled=True)
-            return pr_new, None
+            return _ell_block_iter(data_blk, idx_blk, pr, dang_full,
+                                   axes, d, nt), None
 
-        pr, _ = jax.lax.scan(one_iter, pr0, None, length=n_iters)
+        pr, _ = jax.lax.scan(one_iter, _pr0(n, nt), None, length=n_iters)
         return pr
 
     return shard_map(
         kernel, mesh,
         in_specs=(P(axes), P(axes), P()),
         out_specs=P())(ell_data, ell_idx, dang)
+
+
+def pagerank_distributed_sparse_tol(ell_data: jax.Array, ell_idx: jax.Array,
+                                    mesh: Mesh, tol: float = 1e-6,
+                                    max_iters: int = 1000, d: float = 0.85,
+                                    dangling: jax.Array | None = None,
+                                    axes: tuple[str, ...] = ("data", "model"),
+                                    n_true: int | None = None):
+    """Tolerance-terminated row-sharded ELL PageRank.  After each
+    iteration's ``all_gather`` every device holds the full fresh vector, so
+    the residual (and the exit decision) is computed identically everywhere
+    without an extra collective.  Returns ``(pr, n_iters, residual)``."""
+    n = ell_data.shape[0]
+    nt = int(n if n_true is None else n_true)
+    dang = (jnp.zeros((n,), jnp.float32) if dangling is None
+            else jnp.asarray(dangling, jnp.float32))
+
+    def kernel(data_blk, idx_blk, dang_full):
+        mask = _real_mask(n, nt)
+
+        def step(pr):
+            return _ell_block_iter(data_blk, idx_blk, pr, dang_full,
+                                   axes, d, nt)
+
+        def cond(state):
+            _, i, res = state
+            return (res > tol) & (i < max_iters)
+
+        def body(state):
+            pr, i, _ = state
+            new = step(pr)
+            return new, i + 1, jnp.sum(jnp.abs(new - pr) * mask)
+
+        return jax.lax.while_loop(
+            cond, body, (_pr0(n, nt), jnp.int32(0), jnp.float32(jnp.inf)))
+
+    return shard_map(
+        kernel, mesh,
+        in_specs=(P(axes), P(axes), P()),
+        out_specs=(P(), P(), P()))(ell_data, ell_idx, dang)
+
+
+# --------------------------------------------------------------------------- #
+# query-sharded batched personalized PageRank                                 #
+# --------------------------------------------------------------------------- #
+def ppr_distributed_dense(H: jax.Array, dang: jax.Array, V: jax.Array,
+                          mesh: Mesh, n_iters: int = 100, d: float = 0.85,
+                          row_axis: str = "data",
+                          col_axis: str = "model") -> jax.Array:
+    """Batched PPR with the (N, Q) rank matrix sharded over the query axis.
+
+    H is the *unfixed* transition matrix (the PPR leak teleports to V, not
+    1/n), resharded by the in_spec to row blocks on ``row_axis`` and
+    replicated along ``col_axis``; V rides ``P(None, col_axis)``.  Each
+    mesh column owns Q/C queries; each mesh row owns N/R rows of the sweep,
+    re-assembled by one row-axis ``all_gather`` per iteration.  Returns the
+    (N, Q) rank matrix sharded like V.
+    """
+
+    def kernel(h_blk, dang_full, v_blk):
+        def mv(PR):                     # local row-block MV, re-assembled
+            return jax.lax.all_gather(h_blk @ PR, row_axis, axis=0,
+                                      tiled=True)
+
+        def one_iter(pr_blk, _):
+            return ppr_step_batched(mv, pr_blk, v_blk, dang_full, d), None
+
+        pr, _ = jax.lax.scan(one_iter, v_blk, None, length=n_iters)
+        return pr
+
+    return shard_map(
+        kernel, mesh,
+        in_specs=(P(row_axis, None), P(), P(None, col_axis)),
+        out_specs=P(None, col_axis))(H, dang, V)
+
+
+def ppr_distributed_sparse(ell_data: jax.Array, ell_idx: jax.Array,
+                           dang: jax.Array, V: jax.Array, mesh: Mesh,
+                           n_iters: int = 100, d: float = 0.85,
+                           axes: tuple[str, ...] = ("data", "model")
+                           ) -> jax.Array:
+    """Batched PPR over replicated ELL operands, (N, Q) sharded over the
+    query axis on the flattened mesh — each device propagates its own query
+    block end-to-end with zero per-iteration collectives (the ELL operands
+    of a sparse interactome are small enough to replicate; the dense-H
+    variant above is the one that shards the sweep itself)."""
+
+    def kernel(data_full, idx_full, dang_full, v_blk):
+        def mv(PR):                     # ELL matmat, fully local
+            return jnp.sum(data_full[..., None] * PR[idx_full], axis=1)
+
+        def one_iter(pr_blk, _):
+            return ppr_step_batched(mv, pr_blk, v_blk, dang_full, d), None
+
+        pr, _ = jax.lax.scan(one_iter, v_blk, None, length=n_iters)
+        return pr
+
+    return shard_map(
+        kernel, mesh,
+        in_specs=(P(), P(), P(), P(None, axes)),
+        out_specs=P(None, axes))(ell_data, ell_idx, dang, V)
 
 
 def make_sharded_inputs_dense(H, mesh: Mesh, row_axis="data",

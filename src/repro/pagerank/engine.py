@@ -26,6 +26,15 @@ with no host intervention; :class:`PageRankEngine` is the JAX analogue:
   as one (N, Q) rank matrix sharing a single sweep over H per iteration
   (the MELOPPR-style batching; the Pallas tier rides the already-batched
   ``streaming_matvec``).
+* **Sharded multi-device tiers** — ``dense_sharded`` runs the paper's
+  fabric schedule (:mod:`repro.pagerank.distributed` over
+  :mod:`repro.core.fabric_matvec`) with H blocked ``P(row, col)`` over a
+  2-D device mesh; ``ell_sharded`` row-shards the ELL layout over the
+  flattened mesh with one ``all_gather`` per iteration.  Both build their
+  ``NamedSharding`` layouts once at construction, keep tolerance-based
+  early exit working across the mesh (the residual is a replicated
+  scalar), and shard the batched (N, Q) PPR matrix over the query axis so
+  a multi-user serve batch spreads across devices.
 
 The canonical per-iteration step functions live in
 :mod:`repro.pagerank.steps` and are shared with ``repro.pagerank.dense`` /
@@ -36,18 +45,22 @@ two bit-identical.
 """
 from __future__ import annotations
 
+import math
 from functools import partial
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.graph import transition as tr
 from repro.kernels import ops as kops
 from repro.kernels.pagerank_step import (pad_pagerank_operands,
                                          pagerank_step_fused)
 from repro.kernels.streaming_matvec import streaming_matvec
+from repro.launch.mesh import make_mesh
+from repro.pagerank import distributed as dist
 from repro.pagerank.dense import pagerank_dense, pagerank_dense_fixed
 from repro.pagerank.steps import (dense_step, ppr_step, ppr_step_batched,
                                   seed_matrix, sparse_step)
@@ -55,20 +68,30 @@ from repro.pagerank.steps import (dense_step, ppr_step, ppr_step_batched,
 __all__ = ["PageRankEngine", "select_backend", "dense_step", "sparse_step",
            "ppr_step", "ppr_step_batched", "seed_matrix"]
 
-BACKENDS = ("dense", "ell", "bsr", "pallas_dense")
+BACKENDS = ("dense", "ell", "bsr", "pallas_dense", "dense_sharded",
+            "ell_sharded")
+SHARDED_BACKENDS = ("dense_sharded", "ell_sharded")
 
 # auto-selection thresholds on nnz / n^2
 DENSE_DENSITY = 0.25    # at/above: blocked-dense sweeps beat index chasing
 BSR_DENSITY = 0.02      # at/below (sparsity >= 98%): block-sparse rows win
 
 
-def select_backend(n: int, density: float, device: str | None = None) -> str:
-    """Pick an execution backend from graph density and the active device.
+def select_backend(n: int, density: float, device: str | None = None,
+                   n_devices: int | None = None) -> str:
+    """Pick an execution backend from graph density and the device topology.
 
     ``device`` defaults to ``jax.default_backend()`` so the same code picks
-    the Mosaic-compiled Pallas tier on TPU and the XLA tiers elsewhere.
+    the Mosaic-compiled Pallas tier on TPU and the XLA tiers elsewhere;
+    ``n_devices`` defaults to ``jax.device_count()`` so a multi-device
+    process auto-picks the sharded tiers (the single-device heuristics only
+    apply on one chip).
     """
     device = device or jax.default_backend()
+    n_devices = jax.device_count() if n_devices is None else n_devices
+    if n_devices > 1:
+        return ("dense_sharded" if density >= DENSE_DENSITY
+                else "ell_sharded")
     if density >= DENSE_DENSITY:
         return "pallas_dense" if device == "tpu" else "dense"
     if device == "tpu" and density <= BSR_DENSITY and n >= 256:
@@ -76,6 +99,29 @@ def select_backend(n: int, density: float, device: str | None = None) -> str:
         # CPU the block einsum loses to the ELL gather, so TPU-only
         return "bsr"
     return "ell"
+
+
+def _default_mesh(backend: str) -> Mesh:
+    """All visible devices: a near-square 2-D (row, col) mesh for the dense
+    fabric schedule, a flat 1-D mesh for the row-sharded ELL tier."""
+    ndev = jax.device_count()
+    if backend == "ell_sharded":
+        return make_mesh((ndev,), ("shard",))
+    r = int(math.isqrt(ndev))
+    while ndev % r:
+        r -= 1
+    return make_mesh((r, ndev // r), ("row", "col"))
+
+
+def _dedupe_edges(src: np.ndarray, dst: np.ndarray,
+                  n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Collapse duplicate directed edges.  The engine's contract is a *set*
+    of edges: without this, a repeated (u, v) inflates outdeg(u) in the
+    dense builder but contributes multiple summed entries in CSR/ELL, and
+    the tiers silently disagree."""
+    key = src.astype(np.int64) * int(n) + dst.astype(np.int64)
+    uniq = np.unique(key)
+    return ((uniq // n).astype(np.int32), (uniq % n).astype(np.int32))
 
 
 # --------------------------------------------------------------------------- #
@@ -184,6 +230,67 @@ def _run_ppr(operands, dang, V, d, *, backend: str, n: int, n_iters: int):
 
 
 # --------------------------------------------------------------------------- #
+# whole-loop compiled runners (sharded multi-device tiers)                    #
+#                                                                             #
+# The mesh, axis names, true node count, and schedule length are all static: #
+# one compiled program per (mesh, schedule), every call one dispatch.  The   #
+# distributed schedules themselves live in repro.pagerank.distributed.       #
+# --------------------------------------------------------------------------- #
+@partial(jax.jit, static_argnames=("mesh", "axes", "n_true", "n_iters", "d"))
+def _run_fixed_dense_sharded(H, dang, *, mesh, axes, n_true, n_iters, d):
+    pr = dist.pagerank_distributed(H, mesh, n_iters=n_iters, d=d,
+                                   row_axis=axes[0], col_axis=axes[1],
+                                   dangling=dang, n_true=n_true)
+    return pr[:n_true]
+
+
+@partial(jax.jit, static_argnames=("mesh", "axes", "n_true", "max_iters",
+                                   "d"))
+def _run_tol_dense_sharded(H, dang, tol, *, mesh, axes, n_true, max_iters,
+                           d):
+    pr, iters, res = dist.pagerank_distributed_tol(
+        H, mesh, tol=tol, max_iters=max_iters, d=d, row_axis=axes[0],
+        col_axis=axes[1], dangling=dang, n_true=n_true)
+    return pr[:n_true], iters, res
+
+
+@partial(jax.jit, static_argnames=("mesh", "axes", "n_true", "n_iters", "d"))
+def _run_ppr_dense_sharded(H, dang, V, *, mesh, axes, n_true, n_iters, d):
+    # H is stored dangling-UNFIXED for this tier, so the PPR schedule can
+    # teleport the leak to V directly — no column reconstruction needed.
+    PR = dist.ppr_distributed_dense(H, dang, V, mesh, n_iters=n_iters, d=d,
+                                    row_axis=axes[0], col_axis=axes[1])
+    return PR[:n_true]
+
+
+@partial(jax.jit, static_argnames=("mesh", "axes", "n_true", "n_iters", "d"))
+def _run_fixed_ell_sharded(data, idx, dang, *, mesh, axes, n_true, n_iters,
+                           d):
+    pr = dist.pagerank_distributed_sparse(data, idx, mesh, n_iters=n_iters,
+                                          d=d, dangling=dang, axes=axes,
+                                          n_true=n_true)
+    return pr[:n_true]
+
+
+@partial(jax.jit, static_argnames=("mesh", "axes", "n_true", "max_iters",
+                                   "d"))
+def _run_tol_ell_sharded(data, idx, dang, tol, *, mesh, axes, n_true,
+                         max_iters, d):
+    pr, iters, res = dist.pagerank_distributed_sparse_tol(
+        data, idx, mesh, tol=tol, max_iters=max_iters, d=d, dangling=dang,
+        axes=axes, n_true=n_true)
+    return pr[:n_true], iters, res
+
+
+@partial(jax.jit, static_argnames=("mesh", "axes", "n_true", "n_iters", "d"))
+def _run_ppr_ell_sharded(data, idx, dang, V, *, mesh, axes, n_true, n_iters,
+                         d):
+    PR = dist.ppr_distributed_sparse(data, idx, dang, V, mesh,
+                                     n_iters=n_iters, d=d, axes=axes)
+    return PR[:n_true]
+
+
+# --------------------------------------------------------------------------- #
 # whole-loop compiled runners (Pallas pre-padded dense tier)                  #
 # --------------------------------------------------------------------------- #
 @partial(jax.jit, static_argnames=("n", "n_iters", "d", "block_n",
@@ -262,18 +369,28 @@ class PageRankEngine:
     * ``"bsr"``          — MXU-aligned block-sparse rows, explicit leak.
     * ``"pallas_dense"`` — pre-padded dense layout through the fused
       Pallas kernel with the in-kernel dangling reduction.
-    * ``"auto"``         — :func:`select_backend` by density + device.
+    * ``"dense_sharded"``— dangling-unfixed dense H blocked P(row, col)
+      over a 2-D device mesh, iterated with the paper's fabric schedule
+      (one psum + one re-injection per iteration); explicit scalar leak.
+    * ``"ell_sharded"``  — full-K ELL rows sharded over the flattened
+      mesh, rank vector replicated, one tiled all_gather per iteration.
+    * ``"auto"``         — :func:`select_backend` by density + device
+      topology (multi-device processes pick the sharded tiers).
+
+    The sharded tiers zero-pad N (and the PPR query axis) up to the mesh
+    divisibility requirement at construction; pad entries never feed back
+    into real ranks and results are sliced back to N.  Duplicate directed
+    edges are collapsed up front so every tier sees the same graph.
     """
 
     def __init__(self, src: np.ndarray, dst: np.ndarray, n: int, *,
                  d: float = 0.85, backend: str = "auto",
                  block_n: int = 256, block_m: int = 256,
                  bsr_block_size: int = 128, ell_k: int | None = None,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None, mesh: Mesh | None = None):
         self.n = int(n)
         self.d = float(d)
-        src = np.asarray(src)
-        dst = np.asarray(dst)
+        src, dst = _dedupe_edges(np.asarray(src), np.asarray(dst), self.n)
         self.n_edges = int(len(src))
         self.density = self.n_edges / float(self.n * self.n)
         self.interpret = (kops.default_interpret() if interpret is None
@@ -286,6 +403,10 @@ class PageRankEngine:
 
         self._dang = jnp.asarray(tr.dangling_mask(src, n).astype(np.float32))
         self._block = (block_n, block_m)
+        self.mesh = None
+        self._axes: tuple[str, ...] = ()
+        self._n_pad = self.n
+        self._ppr_operands: tuple | None = None
         self.layout = self.backend
         if self.backend == "dense":
             self._operands = (tr.build_transition_dense(src, dst, n),)
@@ -295,6 +416,42 @@ class PageRankEngine:
         elif self.backend == "bsr":
             self._operands = (tr.build_transition_bsr(src, dst, n,
                                                       bs=bsr_block_size),)
+        elif self.backend == "dense_sharded":
+            self.mesh = mesh if mesh is not None else _default_mesh(
+                self.backend)
+            self._axes = tuple(self.mesh.axis_names)
+            if len(self._axes) != 2:
+                raise ValueError("dense_sharded needs a 2-D mesh, got axes "
+                                 f"{self._axes}")
+            r, c = (self.mesh.shape[a] for a in self._axes)
+            self._n_pad = -(-self.n // math.lcm(r, c)) * math.lcm(r, c)
+            Hp = np.zeros((self._n_pad, self._n_pad), np.float32)
+            Hp[:n, :n] = np.asarray(tr.build_transition_dense(
+                src, dst, n, fix_dangling=False))
+            self._operands = (jax.device_put(
+                Hp, NamedSharding(self.mesh, P(*self._axes))),)
+            self._dang = self._pad_replicated(self._dang)
+            self.layout = (f"dense_sharded({r}x{c} mesh, "
+                           f"n_pad={self._n_pad})")
+        elif self.backend == "ell_sharded":
+            self.mesh = mesh if mesh is not None else _default_mesh(
+                self.backend)
+            self._axes = tuple(self.mesh.axis_names)
+            ndev = self.mesh.size
+            self._n_pad = -(-self.n // ndev) * ndev
+            # full-K ELL (not the split layout): row blocks must be
+            # self-contained so each device sweeps its rows with one gather
+            ell = tr.build_transition_ell(src, dst, n)
+            data = np.zeros((self._n_pad, ell.k), np.float32)
+            idx = np.zeros((self._n_pad, ell.k), np.int32)
+            data[:n] = np.asarray(ell.data)
+            idx[:n] = np.asarray(ell.indices)
+            rows = NamedSharding(self.mesh, P(self._axes))
+            self._operands = (jax.device_put(data, rows),
+                              jax.device_put(idx, rows))
+            self._dang = self._pad_replicated(self._dang)
+            self.layout = (f"ell_sharded(k={ell.k}, shards={ndev}, "
+                           f"n_pad={self._n_pad})")
         else:                                   # pallas_dense
             H = tr.build_transition_dense(src, dst, n, fix_dangling=False)
             Hp, dangp, bn, bm = pad_pagerank_operands(
@@ -302,9 +459,52 @@ class PageRankEngine:
             self._operands = (Hp, dangp)
             self._block = (bn, bm)
 
+    def _pad_replicated(self, dang: jax.Array) -> jax.Array:
+        padded = np.zeros((self._n_pad,), np.float32)
+        padded[:self.n] = np.asarray(dang)
+        return jax.device_put(padded, NamedSharding(self.mesh, P()))
+
+    @property
+    def operands(self) -> tuple:
+        """The prepared (already padded/sharded) layout arrays — read-only
+        access for inspection (shard shapes, memory accounting)."""
+        return self._operands
+
+    def lower_run(self, n_iters: int = 100):
+        """AOT-lower the fixed-schedule ``run`` without executing it, for
+        collective audits / HLO dumps of the sharded tiers (e.g. counting
+        all-reduces in ``.compile().as_text()``)."""
+        if self.backend == "dense_sharded":
+            return _run_fixed_dense_sharded.lower(
+                self._operands[0], self._dang, mesh=self.mesh,
+                axes=self._axes, n_true=self.n, n_iters=n_iters, d=self.d)
+        if self.backend == "ell_sharded":
+            return _run_fixed_ell_sharded.lower(
+                *self._operands, self._dang, mesh=self.mesh,
+                axes=self._axes, n_true=self.n, n_iters=n_iters, d=self.d)
+        if self.backend == "dense":
+            return pagerank_dense_fixed.lower(
+                self._operands[0], n_iters=n_iters, d=self.d)
+        if self.backend == "pallas_dense":
+            return _run_fixed_pallas.lower(
+                *self._operands, n=self.n, n_iters=n_iters, d=self.d,
+                block_n=self._block[0], block_m=self._block[1],
+                interpret=self.interpret)
+        return _run_fixed.lower(self._operands, self._dang, self.d,
+                                backend=self.backend, n=self.n,
+                                n_iters=n_iters)
+
     # ------------------------------ queries ------------------------------ #
     def run(self, n_iters: int = 100) -> jax.Array:
         """Fixed-schedule power iteration; one compiled dispatch."""
+        if self.backend == "dense_sharded":
+            return _run_fixed_dense_sharded(
+                self._operands[0], self._dang, mesh=self.mesh,
+                axes=self._axes, n_true=self.n, n_iters=n_iters, d=self.d)
+        if self.backend == "ell_sharded":
+            return _run_fixed_ell_sharded(
+                *self._operands, self._dang, mesh=self.mesh,
+                axes=self._axes, n_true=self.n, n_iters=n_iters, d=self.d)
         if self.backend == "pallas_dense":
             Hp, dangp = self._operands
             return _run_fixed_pallas(
@@ -321,6 +521,16 @@ class PageRankEngine:
     def run_tol(self, tol: float = 1e-6, max_iters: int = 1000):
         """Tolerance-terminated power iteration; one compiled dispatch.
         Returns ``(pr, n_iters, residual)``."""
+        if self.backend == "dense_sharded":
+            return _run_tol_dense_sharded(
+                self._operands[0], self._dang, jnp.float32(tol),
+                mesh=self.mesh, axes=self._axes, n_true=self.n,
+                max_iters=max_iters, d=self.d)
+        if self.backend == "ell_sharded":
+            return _run_tol_ell_sharded(
+                *self._operands, self._dang, jnp.float32(tol),
+                mesh=self.mesh, axes=self._axes, n_true=self.n,
+                max_iters=max_iters, d=self.d)
         if self.backend == "pallas_dense":
             Hp, dangp = self._operands
             return _run_tol_pallas(
@@ -337,8 +547,40 @@ class PageRankEngine:
     def ppr(self, seed_sets: Sequence[np.ndarray],
             n_iters: int = 100) -> jax.Array:
         """Batched personalized PageRank: one (N, Q) propagation for Q
-        per-user seed sets; returns the (N, Q) rank matrix."""
+        per-user seed sets; returns the (N, Q) rank matrix.
+
+        On the sharded tiers the query axis is sharded across the mesh
+        (padded up to the shard count with zero columns, sliced back), so a
+        multi-user serve flush spreads over devices unchanged."""
         V = seed_matrix(self.n, seed_sets)
+        if self.backend in SHARDED_BACKENDS:
+            q = V.shape[1]
+            q_shards = (self.mesh.shape[self._axes[1]]
+                        if self.backend == "dense_sharded" else
+                        self.mesh.size)
+            q_pad = -(-q // q_shards) * q_shards
+            Vp = np.zeros((self._n_pad, q_pad), np.float32)
+            Vp[:self.n, :q] = V
+            if self.backend == "dense_sharded":
+                PR = _run_ppr_dense_sharded(
+                    self._operands[0], self._dang, jnp.asarray(Vp),
+                    mesh=self.mesh, axes=self._axes, n_true=self.n,
+                    n_iters=n_iters, d=self.d)
+            else:
+                if self._ppr_operands is None:
+                    # PPR propagates query blocks against *replicated*
+                    # operands; the copy is placed once, on first use, so
+                    # serve flushes never re-gather the layout and
+                    # run-only engines never pay the replicated memory
+                    rep = NamedSharding(self.mesh, P())
+                    self._ppr_operands = tuple(
+                        jax.device_put(np.asarray(o), rep)
+                        for o in self._operands)
+                PR = _run_ppr_ell_sharded(
+                    *self._ppr_operands, self._dang, jnp.asarray(Vp),
+                    mesh=self.mesh, axes=self._axes, n_true=self.n,
+                    n_iters=n_iters, d=self.d)
+            return PR[:, :q]
         if self.backend == "pallas_dense":
             Hp, dangp = self._operands
             Vp = np.zeros((V.shape[1], Hp.shape[1]), np.float32)

@@ -1,18 +1,55 @@
 """Test-suite bootstrap.
 
-The container may lack ``hypothesis``; without it seven test modules error
-at *collection*, taking the whole tier-1 run down with them.  When the real
-library is absent we install a minimal deterministic stand-in covering the
-API surface these tests use (``given`` / ``settings`` / ``strategies``:
-integers, floats, sampled_from, sets).  Each ``@given`` test then runs a
-fixed number of seeded pseudo-random examples — far weaker than real
-property testing, but the invariants still get exercised and the suite
-stays green on bare containers.  With ``hypothesis`` installed the stub is
-never registered.
+Two jobs, both of which must run before anything imports ``jax``:
+
+1. **Virtual multi-device CPU.**  The sharded engine tiers
+   (``dense_sharded`` / ``ell_sharded``) need a real device mesh; on CPU CI
+   we get one by injecting ``--xla_force_host_platform_device_count=8``
+   into ``XLA_FLAGS`` here, before the jax backend initializes (conftest is
+   imported before every test module).  Single-device code paths are
+   unaffected — unsharded arrays live on device 0.  Opt out with
+   ``REPRO_SINGLE_DEVICE=1``; tests that genuinely need the mesh take the
+   ``multi_device`` fixture, which skips (rather than fails) if the
+   injection could not take effect (e.g. jax was already initialized by a
+   plugin).
+
+2. **Hypothesis stand-in.**  The container may lack ``hypothesis``; without
+   it several test modules error at *collection*, taking the whole tier-1
+   run down with them.  When the real library is absent we install a
+   minimal deterministic stand-in covering the API surface these tests use
+   (``given`` / ``settings`` / ``strategies``: integers, floats,
+   sampled_from, sets, lists, booleans).  Each ``@given`` test then runs a
+   fixed number of seeded pseudo-random examples — far weaker than real
+   property testing, but the invariants still get exercised and the suite
+   stays green on bare containers.  With ``hypothesis`` installed the stub
+   is never registered.
 """
 from __future__ import annotations
 
+import os
 import sys
+
+import pytest
+
+if (os.environ.get("REPRO_SINGLE_DEVICE") != "1"
+        and "xla_force_host_platform_device_count"
+        not in os.environ.get("XLA_FLAGS", "")):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=8"
+                               ).strip()
+
+
+@pytest.fixture(scope="session")
+def multi_device():
+    """Device count when >1 virtual device is actually live; skips the
+    test otherwise (env injection can only work if jax initialized after
+    conftest import)."""
+    import jax
+    n = jax.device_count()
+    if n < 2:
+        pytest.skip("sharded tiers need >1 device; XLA_FLAGS injection "
+                    "did not take effect")
+    return n
 
 try:
     import hypothesis  # noqa: F401
@@ -52,6 +89,27 @@ except ImportError:
     def _sampled_from(elements):
         elements = list(elements)
         return _Strategy(lambda rng: rng.choice(elements))
+
+    def _booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+    def _lists(elements, min_size=0, max_size=None, unique=False):
+        cap = min_size + 8 if max_size is None else max_size
+
+        def draw(rng):
+            size = rng.randint(min_size, cap)
+            if not unique:
+                return [elements.example(rng) for _ in range(size)]
+            out: list = []
+            for _ in range(200):
+                if len(out) >= size:
+                    break
+                v = elements.example(rng)
+                if v not in out:
+                    out.append(v)
+            return out
+
+        return _Strategy(draw)
 
     def _sets(elements, min_size=0, max_size=None):
         cap = min_size + 8 if max_size is None else max_size
@@ -107,6 +165,8 @@ except ImportError:
     _st.floats = _floats
     _st.sampled_from = _sampled_from
     _st.sets = _sets
+    _st.lists = _lists
+    _st.booleans = _booleans
 
     _hyp = types.ModuleType("hypothesis")
     _hyp.given = _given

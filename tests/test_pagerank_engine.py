@@ -94,19 +94,26 @@ def test_batched_ppr_pallas_matches_xla(net):
 
 def test_backend_auto_selection():
     """Density/device routing: BSR above the sparsity threshold on TPU,
-    ELL for mid-sparsity, dense tiers for dense graphs."""
+    ELL for mid-sparsity, dense tiers for dense graphs.  n_devices pinned
+    to 1 — the suite runs under 8 virtual devices (conftest), where auto
+    picks the sharded tiers (tests/test_engine_sharded.py)."""
     # sparsity >= 98% on TPU -> block-sparse rows
-    assert select_backend(5000, 0.004, device="tpu") == "bsr"
-    assert select_backend(5000, 0.019, device="tpu") == "bsr"
+    assert select_backend(5000, 0.004, device="tpu", n_devices=1) == "bsr"
+    assert select_backend(5000, 0.019, device="tpu", n_devices=1) == "bsr"
     # below the sparsity threshold (denser): ELL
-    assert select_backend(5000, 0.05, device="tpu") == "ell"
+    assert select_backend(5000, 0.05, device="tpu", n_devices=1) == "ell"
     # CPU: the block einsum loses to the ELL gather
-    assert select_backend(5000, 0.004, device="cpu") == "ell"
+    assert select_backend(5000, 0.004, device="cpu", n_devices=1) == "ell"
     # dense graphs: fused Pallas on TPU, XLA matmul elsewhere
-    assert select_backend(1000, 0.4, device="tpu") == "pallas_dense"
-    assert select_backend(1000, 0.4, device="cpu") == "dense"
+    assert select_backend(1000, 0.4, device="tpu",
+                          n_devices=1) == "pallas_dense"
+    assert select_backend(1000, 0.4, device="cpu", n_devices=1) == "dense"
     # tiny graphs never pick BSR
-    assert select_backend(100, 0.001, device="tpu") == "ell"
+    assert select_backend(100, 0.001, device="tpu", n_devices=1) == "ell"
+    # any multi-device topology routes to the sharded tiers
+    assert select_backend(5000, 0.004, device="tpu",
+                          n_devices=4) == "ell_sharded"
+    assert select_backend(1000, 0.4, n_devices=4) == "dense_sharded"
 
 
 def test_engine_auto_uses_selector(net):

@@ -1,0 +1,104 @@
+"""Property-based PageRank invariants, every backend x random graphs.
+
+Four invariants that hold for *any* graph, so they make good randomized
+oracles (run under real hypothesis when installed, else the deterministic
+conftest stub):
+
+* ranks are a distribution: non-negative, summing to 1;
+* ranks are permutation-equivariant: relabeling nodes permutes the ranks;
+* ranks are invariant to duplicate-edge collapsing (the engine
+  canonicalizes its edge list, so a multigraph input and its simple-graph
+  collapse produce identical operands);
+* batched PPR columns are distributions for arbitrary seed lists.
+
+Backends are pytest-parametrized (deterministic coverage), graphs are
+property-drawn.  Sizes stay small: each example pays a fresh whole-loop
+compile because the ELL width K tracks the drawn graph's max degree.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.graph import generators as gen
+from repro.pagerank import PageRankEngine
+from repro.pagerank.engine import BACKENDS
+
+ALL_BACKENDS = BACKENDS          # includes the sharded multi-device tiers
+ITERS = 20
+
+
+def _graph(n: int, seed: int, scale_free: bool):
+    if scale_free:
+        return gen.protein_network(n, seed=seed)
+    return gen.erdos_renyi(n, avg_degree=5.0, seed=seed)
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+@settings(max_examples=5, deadline=None)
+@given(n=st.sampled_from([24, 32, 48]), seed=st.integers(0, 10_000),
+       scale_free=st.booleans())
+def test_ranks_are_a_distribution(backend, n, seed, scale_free):
+    src, dst = _graph(n, seed, scale_free)
+    eng = PageRankEngine(src, dst, n, backend=backend)
+    pr = np.asarray(eng.run(n_iters=ITERS))
+    assert pr.shape == (n,)
+    assert (pr >= 0).all()
+    assert pr.sum() == pytest.approx(1.0, abs=1e-4)
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000), perm_seed=st.integers(0, 10_000))
+def test_ranks_are_permutation_equivariant(backend, seed, perm_seed):
+    """Relabeling nodes by a permutation pi permutes the ranks: running on
+    (pi(src), pi(dst)) must equal pi applied to the original ranks."""
+    n = 32
+    src, dst = _graph(n, seed, scale_free=True)
+    perm = np.random.default_rng(perm_seed).permutation(n).astype(np.int32)
+    pr = np.asarray(
+        PageRankEngine(src, dst, n, backend=backend).run(n_iters=ITERS))
+    pr_perm = np.asarray(
+        PageRankEngine(perm[src], perm[dst], n,
+                       backend=backend).run(n_iters=ITERS))
+    np.testing.assert_allclose(pr_perm[perm], pr, rtol=1e-4, atol=2e-6)
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000), dup_seed=st.integers(0, 10_000))
+def test_ranks_invariant_to_duplicate_edge_collapsing(backend, seed,
+                                                      dup_seed):
+    """A multigraph edge list and its duplicate-collapsed form build the
+    same engine operands (the engine canonicalizes), so the ranks are
+    *identical* — without the canonicalization the dense builder (set +
+    inflated outdeg) and the CSR/ELL builders (summed entries) silently
+    disagree on repeated edges."""
+    n = 32
+    src, dst = _graph(n, seed, scale_free=False)
+    rng = np.random.default_rng(dup_seed)
+    pick = rng.integers(0, len(src), size=len(src) // 2 + 1)
+    src_dup = np.concatenate([src, src[pick], src[pick]])
+    dst_dup = np.concatenate([dst, dst[pick], dst[pick]])
+    eng = PageRankEngine(src, dst, n, backend=backend)
+    eng_dup = PageRankEngine(src_dup, dst_dup, n, backend=backend)
+    assert eng_dup.n_edges == eng.n_edges
+    np.testing.assert_array_equal(np.asarray(eng_dup.run(n_iters=ITERS)),
+                                  np.asarray(eng.run(n_iters=ITERS)))
+
+
+@pytest.mark.parametrize("backend", ["ell", "dense", "ell_sharded"])
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       seeds_a=st.lists(st.integers(0, 23), min_size=1, max_size=4),
+       seeds_b=st.lists(st.integers(0, 23), min_size=1, max_size=4))
+def test_ppr_columns_are_distributions(backend, seed, seeds_a, seeds_b):
+    n = 24
+    src, dst = _graph(n, seed, scale_free=True)
+    eng = PageRankEngine(src, dst, n, backend=backend)
+    PPR = np.asarray(eng.ppr([np.asarray(seeds_a), np.asarray(seeds_b)],
+                             n_iters=ITERS))
+    assert PPR.shape == (n, 2)
+    assert (PPR >= 0).all()
+    np.testing.assert_allclose(PPR.sum(axis=0), 1.0, atol=1e-4)
