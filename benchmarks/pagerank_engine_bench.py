@@ -187,8 +187,16 @@ def run(n: int = 2048, iters: int = 100, reps: int = 7,
         },
     }
     if out_path:
+        # read-merge-write: other benches own sibling blocks of the same
+        # artifact (dynamic_bench's "dynamic"); regenerating the headline
+        # numbers alone must not strip them
+        merged = {}
+        if os.path.exists(out_path):
+            with open(out_path) as f:
+                merged = json.load(f)
+        merged.update(report)
         with open(out_path, "w") as f:
-            json.dump(report, f, indent=2)
+            json.dump(merged, f, indent=2)
 
     return {"name": "pagerank_engine",
             "us_per_call": per_iter[f"engine_{best_tier}_ms"] * 1e3,

@@ -1,0 +1,69 @@
+"""Live-serving PageRank over a streaming protein-interaction graph.
+
+The end-to-end dynamic-graph demo: a Barabási–Albert interactome evolves
+through timestamped edge arrivals/expiries (`graph.delta.EdgeStream`),
+`DynamicPageRankEngine` folds each delta into its prepared layout in place
+(Gauss–Southwell push for small deltas, warm-started tolerance loop or
+full rebuild when the auto policy escalates), and `PageRankQueryEngine`
+keeps serving batched personalized-PageRank queries whose results are
+never staler than one refresh interval.
+
+Run:  PYTHONPATH=src python examples/streaming_pagerank.py [--nodes N]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.graph.delta import EdgeStream, apply_delta
+from repro.pagerank import DynamicPageRankEngine, PageRankEngine
+from repro.serve import PageRankQueryEngine
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--nodes", type=int, default=2000)
+    ap.add_argument("--steps", type=int, default=8)
+    args = ap.parse_args(argv)
+    n = args.nodes
+
+    stream = EdgeStream(n, m_edges=4, seed=0, insert_per_step=6,
+                        delete_per_step=4)
+    src, dst = stream.base()
+    engine = DynamicPageRankEngine(src, dst, n, backend="ell")
+    pr, iters, _ = engine.run_tol(1e-7)
+    print(f"base graph: n={n}, edges={engine.n_edges}, "
+          f"layout={engine.layout}, cold solve {int(iters)} iters")
+
+    serve = PageRankQueryEngine(engine, n_iters=60, max_batch=4)
+    rng = np.random.default_rng(0)
+    cur = (src, dst)
+    for step, delta in zip(range(args.steps), stream):
+        serve.push_update(delta)          # edges arrive while queries queue
+        queries = [serve.submit(uid=step * 10 + q,
+                                seeds=rng.choice(n, size=3, replace=False),
+                                top_k=5)
+                   for q in range(3)]
+        t0 = time.time()
+        serve.flush()                     # refresh graph, then serve batch
+        dt = (time.time() - t0) * 1e3
+        info = serve.last_update_info
+        cur = apply_delta(cur[0], cur[1], delta, n)
+        top = queries[0].result[0][:3]
+        print(f"t={delta.timestamp:4.1f}  +{delta.n_insert // 2}/"
+              f"-{delta.n_delete // 2} edges  refresh={info.strategy:7s} "
+              f"({info.iters:3d} sweeps, residual {info.residual:.1e})  "
+              f"flush {dt:6.1f} ms  top proteins uid{queries[0].uid}: {top}")
+
+    # the whole stream, cross-checked against a from-scratch engine
+    scratch = PageRankEngine(cur[0], cur[1], n, backend="ell")
+    ref = scratch.run_tol(1e-8, max_iters=1000)[0]
+    l1 = float(np.abs(np.asarray(engine.ranks) - np.asarray(ref)).sum())
+    print(f"after {args.steps} deltas: L1(incremental, from-scratch) = "
+          f"{l1:.2e}  (refreshes={serve.n_refreshes})")
+
+
+if __name__ == "__main__":
+    main()

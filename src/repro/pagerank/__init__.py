@@ -3,7 +3,8 @@ from repro.pagerank.sparse import pagerank_sparse
 from repro.pagerank.distributed import pagerank_distributed
 from repro.pagerank.fabric import pagerank_on_fabric
 from repro.pagerank.engine import PageRankEngine, select_backend
+from repro.pagerank.dynamic import DynamicPageRankEngine, UpdateInfo
 
 __all__ = ["pagerank_dense", "pagerank_dense_fixed", "pagerank_sparse",
            "pagerank_distributed", "pagerank_on_fabric", "PageRankEngine",
-           "select_backend"]
+           "select_backend", "DynamicPageRankEngine", "UpdateInfo"]

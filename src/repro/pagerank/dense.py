@@ -21,10 +21,11 @@ from repro.pagerank.steps import dense_step
 
 @partial(jax.jit, static_argnames=("max_iters",))
 def pagerank_dense(H: jax.Array, d: float = 0.85, tol: float = 1e-6,
-                   max_iters: int = 1000):
-    """Returns (pr, n_iters, residual)."""
+                   max_iters: int = 1000, x0: jax.Array | None = None):
+    """Returns (pr, n_iters, residual).  ``x0`` warm-starts the loop from a
+    previous rank vector; ``None`` is the classic uniform cold start."""
     n = H.shape[0]
-    pr0 = jnp.full((n,), 1.0 / n, H.dtype)
+    pr0 = jnp.full((n,), 1.0 / n, H.dtype) if x0 is None else x0
 
     def cond(state):
         _, i, res = state

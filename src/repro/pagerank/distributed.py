@@ -100,10 +100,12 @@ def pagerank_distributed_tol(H: jax.Array, mesh: Mesh, tol: float = 1e-6,
                              max_iters: int = 1000, d: float = 0.85,
                              row_axis: str = "data", col_axis: str = "model",
                              dangling: jax.Array | None = None,
-                             n_true: int | None = None):
+                             n_true: int | None = None,
+                             x0: jax.Array | None = None):
     """Tolerance-terminated fabric-schedule PageRank; the L1 residual is a
     replicated scalar, so every device exits the ``while_loop`` on the same
-    iteration.  Returns ``(pr, n_iters, residual)``."""
+    iteration.  Returns ``(pr, n_iters, residual)``.  ``x0`` (padded to N,
+    zeros on the pad tail) warm-starts the loop."""
     n = H.shape[0]
     nt = int(n if n_true is None else n_true)
     mask = jax.lax.with_sharding_constraint(
@@ -122,7 +124,8 @@ def pagerank_distributed_tol(H: jax.Array, mesh: Mesh, tol: float = 1e-6,
         return new, i + 1, jnp.sum(jnp.abs(new - pr) * mask)
 
     pr0 = jax.lax.with_sharding_constraint(
-        _pr0(n, nt, H.dtype), NamedSharding(mesh, P(col_axis)))
+        _pr0(n, nt, H.dtype) if x0 is None else x0.astype(H.dtype),
+        NamedSharding(mesh, P(col_axis)))
     return jax.lax.while_loop(
         cond, body, (pr0, jnp.int32(0), jnp.asarray(jnp.inf, H.dtype)))
 
@@ -172,17 +175,21 @@ def pagerank_distributed_sparse_tol(ell_data: jax.Array, ell_idx: jax.Array,
                                     max_iters: int = 1000, d: float = 0.85,
                                     dangling: jax.Array | None = None,
                                     axes: tuple[str, ...] = ("data", "model"),
-                                    n_true: int | None = None):
+                                    n_true: int | None = None,
+                                    x0: jax.Array | None = None):
     """Tolerance-terminated row-sharded ELL PageRank.  After each
     iteration's ``all_gather`` every device holds the full fresh vector, so
     the residual (and the exit decision) is computed identically everywhere
-    without an extra collective.  Returns ``(pr, n_iters, residual)``."""
+    without an extra collective.  Returns ``(pr, n_iters, residual)``.
+    ``x0`` (padded to N, zeros on the pad tail) warm-starts the loop; it
+    rides into the kernel as a replicated operand like the dangling mask."""
     n = ell_data.shape[0]
     nt = int(n if n_true is None else n_true)
     dang = (jnp.zeros((n,), jnp.float32) if dangling is None
             else jnp.asarray(dangling, jnp.float32))
+    pr0 = _pr0(n, nt) if x0 is None else jnp.asarray(x0, jnp.float32)
 
-    def kernel(data_blk, idx_blk, dang_full):
+    def kernel(data_blk, idx_blk, dang_full, pr0_full):
         mask = _real_mask(n, nt)
 
         def step(pr):
@@ -199,12 +206,12 @@ def pagerank_distributed_sparse_tol(ell_data: jax.Array, ell_idx: jax.Array,
             return new, i + 1, jnp.sum(jnp.abs(new - pr) * mask)
 
         return jax.lax.while_loop(
-            cond, body, (_pr0(n, nt), jnp.int32(0), jnp.float32(jnp.inf)))
+            cond, body, (pr0_full, jnp.int32(0), jnp.float32(jnp.inf)))
 
     return shard_map(
         kernel, mesh,
-        in_specs=(P(axes), P(axes), P()),
-        out_specs=(P(), P(), P()))(ell_data, ell_idx, dang)
+        in_specs=(P(axes), P(axes), P(), P()),
+        out_specs=(P(), P(), P()))(ell_data, ell_idx, dang, pr0)
 
 
 # --------------------------------------------------------------------------- #

@@ -1,0 +1,564 @@
+"""Incremental PageRank over a streaming graph.
+
+:class:`DynamicPageRankEngine` extends the whole-loop-compiled
+:class:`~repro.pagerank.engine.PageRankEngine` with an ``update()`` path
+that folds a :class:`~repro.graph.delta.GraphDelta` into the *prepared*
+device layouts in place and re-solves from the previous rank vector —
+turning "rebuild every layout and re-run the full power iteration" into
+"patch a few rows/columns and spend exactly the work the staleness budget
+requires" (the MELOPPR-style low-latency regime).
+
+Three refresh strategies, picked automatically by delta size:
+
+* **push** — a Gauss–Southwell frontier sweep: the residual
+  ``r = A·x + b − x`` of the *new* operator at the *old* ranks is nonzero
+  only near the changed edges; a ``lax.while_loop`` repeatedly pushes every
+  entry of the frontier mask ``|r| ≥ tol/n`` into the iterate and refreshes
+  the residual, terminating on ``‖r‖₁ ≤ tol``.  One device dispatch, a
+  handful of sweeps.
+* **warm-start** — the layouts are patched in place and the existing
+  tolerance loop re-runs with ``x0 =`` previous ranks (the new ``x0``
+  threading through every ``run_tol`` backend).
+* **rebuild** — deltas too large (or structurally too disruptive: an ELL
+  row outgrowing its capacity slack, a BSR/sharded layout) fall back to a
+  full layout rebuild, still warm-starting the solve.
+
+Layout patches are in-place in the functional-JAX sense — a scatter into
+the prepared arrays, never a rebuild:
+
+* **dense / pallas_dense** — the changed transition *columns* are
+  recomputed host-side and written with one ``H.at[:, cols].set`` scatter
+  (the pre-padded Pallas layout keeps its padding; the dangling row mask is
+  patched alongside).
+* **ell** — the dynamic ELL tier is a two-bucket *sliced* ELLPACK (SELL):
+  rows are permuted into a low tier (per-row budget ``k_low`` ≈ the 90th
+  degree percentile + slack) and a hub tier (``k_high`` = max degree +
+  slack), so the sweep is two dense gathers and **no** ``segment_sum`` —
+  measurably faster per iteration than the static engine's split layout —
+  and every affected row is rewritten with one row-scatter per tier.  The
+  capacity slack means small deltas never change any array shape; a row
+  outgrowing its tier triggers the rebuild fallback.
+
+Host-side bookkeeping is a sorted int64 edge-key set (plus its reverse for
+in-neighbor queries) and the degree vectors, so computing affected
+columns/rows for a Δ-edge delta costs ``O(Δ·maxdeg + log E)``, not
+``O(E)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph import transition as tr
+from repro.graph.delta import GraphDelta, edge_keys
+from repro.kernels.streaming_matvec import streaming_matvec
+from repro.pagerank.engine import PageRankEngine, _dedupe_edges, _matvec
+
+__all__ = ["DynamicPageRankEngine", "UpdateInfo", "PATCHABLE_BACKENDS"]
+
+# backends whose prepared layouts accept in-place edge-delta patches; the
+# rest (BSR block structure, sharded NamedSharding placements) rebuild —
+# see the ROADMAP open item on sharded delta application
+PATCHABLE_BACKENDS = ("dense", "ell", "pallas_dense")
+
+
+@dataclasses.dataclass(frozen=True)
+class UpdateInfo:
+    """What one ``update()`` actually did."""
+    strategy: str                 # "push" | "warm" | "rebuild" | "noop"
+    n_inserted: int               # effective directed inserts
+    n_deleted: int                # effective directed deletes
+    cols_patched: int
+    rows_patched: int
+    iters: int                    # push sweeps or warm/rebuild iterations
+    residual: float
+    overflow: bool                # an ELL row outgrew its capacity slack
+
+
+def _in_sorted(sorted_keys: np.ndarray, vals: np.ndarray) -> np.ndarray:
+    """Membership of ``vals`` in a sorted unique key array (searchsorted —
+    no O(E) scan per delta)."""
+    if len(vals) == 0 or len(sorted_keys) == 0:
+        return np.zeros(len(vals), bool)
+    idx = np.searchsorted(sorted_keys, vals)
+    idx = np.minimum(idx, len(sorted_keys) - 1)
+    return sorted_keys[idx] == vals
+
+
+def _key_slice(sorted_keys: np.ndarray, u: int, n: int) -> np.ndarray:
+    """All partners of ``u`` in a sorted key array (``u*n .. (u+1)*n``)."""
+    lo = np.searchsorted(sorted_keys, u * np.int64(n))
+    hi = np.searchsorted(sorted_keys, (u + 1) * np.int64(n))
+    return (sorted_keys[lo:hi] % n).astype(np.int64)
+
+
+def _chunks(idx: np.ndarray, *arrs: np.ndarray, cap: int):
+    """Split a scatter into fixed-``cap``-sized chunks, padding the last by
+    repeating its final element (duplicate indices write identical content,
+    so the scatter result is unchanged).  Scatter shapes are therefore
+    keyed on the chunk COUNT k alone — a small discrete set (k=1 for
+    nearly every stream delta) — instead of one XLA compile per distinct
+    patch size."""
+    for s in range(0, len(idx), cap):
+        i = idx[s:s + cap]
+        a = [x[s:s + cap] for x in arrs]
+        pad = cap - len(i)
+        if pad:
+            i = np.concatenate([i, np.repeat(i[-1:], pad)])
+            a = [np.concatenate([x, np.repeat(x[-1:], pad, axis=0)], axis=0)
+                 for x in a]
+        yield (i, *a)
+
+
+def _stack_chunks(idx: np.ndarray, *arrs: np.ndarray, cap: int):
+    """Stack the fixed-shape chunks along a leading axis, so one jitted
+    scan applies them all: the target buffer is copied ONCE per patch (the
+    scatters fuse in-place inside the program), not once per chunk.  The
+    jitted scatters still recompile per distinct chunk count k (the
+    stacked leading axis) — bounded and tiny in practice; the benchmark
+    warms the shapes it will meet."""
+    groups = list(zip(*_chunks(idx, *arrs, cap=cap)))
+    return tuple(np.stack(g) for g in groups)
+
+
+@jax.jit
+def _scatter_rows(A, pos, rows):
+    """A[pos_c] = rows_c for every chunk c; pos (k, cap), rows (k, cap, K)."""
+    def body(A, args):
+        p, r = args
+        return A.at[p].set(r), None
+
+    A, _ = jax.lax.scan(body, A, (pos, rows))
+    return A
+
+
+@partial(jax.jit, static_argnames=("n",))
+def _scatter_cols(H, ci, mats, *, n: int):
+    """H[:n, ci_c] = mats_c.T for every chunk c; ci (k, cap), mats
+    (k, cap, n).  ``n`` bounds the row slice (== H rows for the unpadded
+    dense operand, the real-node prefix for the padded Pallas one)."""
+    def body(H, args):
+        i, m = args
+        return H.at[:n, i].set(m.T), None
+
+    H, _ = jax.lax.scan(body, H, (ci, mats))
+    return H
+
+
+# --------------------------------------------------------------------------- #
+# Gauss–Southwell push: frontier-masked residual sweeps in one while_loop     #
+#                                                                             #
+# The SELL layout itself needs no runners of its own: engine._matvec knows    #
+# the "sell" tag, so the engine's generic whole-loop dispatchers (run /       #
+# run_tol / ppr) drive it unchanged via self._mv_backend.                     #
+# --------------------------------------------------------------------------- #
+def _push_loop(Ab, x0, tol, n, max_pushes):
+    """Shared frontier loop.  ``Ab(x) = A·x + b`` is the damped PageRank
+    affine operator; the invariant solved for is the fixed point
+    ``x = Ab(x)``.  Every sweep pushes the whole frontier mask
+    ``|r| ≥ tol/n`` (whenever ``‖r‖₁ > tol`` at least one entry qualifies,
+    so the loop cannot stall) and refreshes the residual from scratch —
+    one operator sweep per push round, same cost as an incremental
+    residual update but immune to float drift in the bookkeeping."""
+    thresh = tol / n
+
+    def cond(state):
+        _, r, i = state
+        return (jnp.sum(jnp.abs(r)) > tol) & (i < max_pushes)
+
+    def body(state):
+        x, r, i = state
+        x = x + r * (jnp.abs(r) >= thresh).astype(x.dtype)
+        return x, Ab(x) - x, i + 1
+
+    x, r, iters = jax.lax.while_loop(cond, body, (x0, Ab(x0) - x0,
+                                                  jnp.int32(0)))
+    return x, iters, jnp.sum(jnp.abs(r))
+
+
+@partial(jax.jit, static_argnames=("backend", "n", "max_pushes"))
+def _push_tol(operands, dang, d, tol, x0, *, backend: str, n: int,
+              max_pushes: int):
+    if backend == "dense":
+        # the dangling-FIXED dense operand: the uniform leak columns are
+        # already folded in, so A·x is just d·H·x
+        def Ab(x):
+            return d * (operands[0] @ x) + (1.0 - d) / n
+    else:
+        def Ab(x):
+            return d * (_matvec(backend, operands, x)
+                        + jnp.sum(x * dang) / n) + (1.0 - d) / n
+
+    return _push_loop(Ab, x0, tol, n, max_pushes)
+
+
+@partial(jax.jit, static_argnames=("n", "block_n", "block_m", "interpret",
+                                   "max_pushes"))
+def _push_pallas(Hp, dangp, d, tol, x0, *, n: int, block_n: int,
+                 block_m: int, interpret: bool, max_pushes: int):
+    # state lives in the pre-padded (1, Mp) layout; pad entries of H, dang
+    # and x0 are zero, so the residual is identically zero on the pad tail
+    # and the frontier never touches it
+    Mp = Hp.shape[1]
+    real = (jnp.arange(Mp) < n).astype(jnp.float32)[None, :]
+    xp0 = jnp.pad(x0, (0, Mp - n))[None, :]
+
+    def Ab(xp):
+        y = streaming_matvec(Hp, xp, block_n=block_n, block_m=block_m,
+                             interpret=interpret)
+        leak = jnp.sum(xp * dangp)
+        return d * (y + leak / n * real) + (1.0 - d) / n * real
+
+    xp, iters, res = _push_loop(Ab, xp0, tol, n, max_pushes)
+    return xp[0, :n], iters, res
+
+
+# --------------------------------------------------------------------------- #
+# the dynamic engine                                                          #
+# --------------------------------------------------------------------------- #
+class DynamicPageRankEngine(PageRankEngine):
+    """A :class:`PageRankEngine` over a *live* graph.
+
+    Same constructor, same ``run`` / ``run_tol`` / ``ppr`` surface (the
+    ``ell`` backend transparently swaps in the patchable SELL layout), plus:
+
+    * ``update(delta)`` — fold a :class:`~repro.graph.delta.GraphDelta`
+      into the prepared layouts and refresh the ranks; returns
+      ``(pr, UpdateInfo)``.  Strategy is picked automatically (push for
+      tiny deltas, warm-started ``run_tol`` for patchable mid-size ones,
+      full rebuild beyond ``rebuild_frac`` or on capacity overflow);
+      ``strategy=`` forces one.
+    * ``ranks`` — the latest solved rank vector (refreshed by every
+      ``run`` / ``run_tol`` / ``update``), what the serving layer reads.
+
+    ``update``'s default ``tol=1e-6`` is the serving-grade budget: the L1
+    error of the refreshed ranks is bounded by ``‖r‖₁ / (1 − d·λ₂)`` —
+    a small multiple of the push residual — which keeps incremental and
+    from-scratch ranks within 1e-5 of each other while spending an order
+    of magnitude less work than a cold 1e-8 solve.
+    """
+
+    def __init__(self, src: np.ndarray, dst: np.ndarray, n: int, *,
+                 slack: int = 8, push_max_changed: int = 64,
+                 rebuild_frac: float = 0.05, symmetric: bool = True, **kw):
+        self._slack = int(slack)
+        self.push_max_changed = int(push_max_changed)
+        self.rebuild_frac = float(rebuild_frac)
+        self.symmetric = bool(symmetric)
+        self._pr: jax.Array | None = None
+        super().__init__(src, dst, n, **kw)
+        src, dst = _dedupe_edges(np.asarray(src), np.asarray(dst), self.n)
+        self._keys = edge_keys(src, dst, self.n)
+        self._rkeys = np.sort(np.asarray(dst, np.int64) * self.n
+                              + np.asarray(src, np.int64))
+        self._outdeg = np.bincount(src, minlength=self.n).astype(np.int64)
+        self._indeg = np.bincount(dst, minlength=self.n).astype(np.int64)
+
+    # --------------------------- layout prep --------------------------- #
+    def _prepare_layout(self, src: np.ndarray, dst: np.ndarray) -> None:
+        if self.backend != "ell":
+            super()._prepare_layout(src, dst)
+            return
+        n = self.n
+        self._dang = jnp.asarray(tr.dangling_mask(src, n).astype(np.float32))
+        self.mesh = None
+        self._axes = ()
+        self._n_pad = n
+        self._ppr_operands = None
+        self._mv_backend = "sell"     # engine._matvec's tag for this layout
+        csr = tr.build_transition_csr(src, dst, n)
+        counts = np.diff(np.asarray(csr.indptr))
+        # tier threshold at the 90th degree percentile; capacities sit
+        # ``slack`` (low) / ≥16 rounded-to-32 (high) ABOVE the largest row
+        # they hold, so every row has patch headroom — a row outgrowing its
+        # tier is what escalates update() to the rebuild path
+        thresh = max(4, int(np.percentile(counts, 90)) if len(counts)
+                     else 0)
+        k_low = thresh + self._slack
+        maxdeg = int(counts.max()) if len(counts) else 0
+        k_high = -(-(max(maxdeg, k_low) + max(16, self._slack)) // 32) * 32
+        high = counts > thresh
+        low_rows = np.where(~high)[0]
+        high_rows = np.where(high)[0]
+        perm = np.concatenate([low_rows, high_rows])
+        self._sell_k = (k_low, k_high)
+        self._sell_n_low = len(low_rows)
+        self._sell_pos = np.empty(n, np.int64)       # row -> index in tier
+        self._sell_pos[low_rows] = np.arange(len(low_rows))
+        self._sell_pos[high_rows] = np.arange(len(high_rows))
+        self._sell_high = high
+        inv = np.empty(n, np.int64)
+        inv[perm] = np.arange(n)
+        dl = np.zeros((len(low_rows), k_low), np.float32)
+        il = np.zeros((len(low_rows), k_low), np.int32)
+        dh = np.zeros((len(high_rows), k_high), np.float32)
+        ih = np.zeros((len(high_rows), k_high), np.int32)
+        rows, pos = csr.row_positions()
+        cols = np.asarray(csr.indices)
+        vals = np.asarray(csr.data)
+        in_low = ~high[rows]
+        r_l = self._sell_pos[rows[in_low]]
+        dl[r_l, pos[in_low]] = vals[in_low]
+        il[r_l, pos[in_low]] = cols[in_low]
+        r_h = self._sell_pos[rows[~in_low]]
+        dh[r_h, pos[~in_low]] = vals[~in_low]
+        ih[r_h, pos[~in_low]] = cols[~in_low]
+        self._operands = (jnp.asarray(dl), jnp.asarray(il),
+                          jnp.asarray(dh), jnp.asarray(ih),
+                          jnp.asarray(inv, jnp.int32))
+        self.layout = (f"sell(k_low={k_low}, k_high={k_high}, "
+                       f"n_high={len(high_rows)}, slack={self._slack})")
+
+    # ----------------------- solver front doors ------------------------ #
+    @property
+    def ranks(self) -> jax.Array | None:
+        """Latest solved rank vector (``None`` until the first solve)."""
+        return self._pr
+
+    def run(self, n_iters: int = 100) -> jax.Array:
+        # the engine's generic runners drive the SELL layout through
+        # _mv_backend — these overrides only stash the latest ranks
+        pr = super().run(n_iters)
+        self._pr = pr
+        return pr
+
+    def run_tol(self, tol: float = 1e-6, max_iters: int = 1000,
+                x0: np.ndarray | jax.Array | None = None):
+        out = super().run_tol(tol, max_iters, x0)
+        self._pr = out[0]
+        return out
+
+    # --------------------------- the update ---------------------------- #
+    def update(self, delta: GraphDelta, *, tol: float = 1e-6,
+               max_iters: int = 1000, strategy: str = "auto"
+               ) -> tuple[jax.Array, UpdateInfo]:
+        """Fold ``delta`` into the prepared layouts and refresh the ranks.
+
+        Returns ``(pr, UpdateInfo)``.  ``strategy``: ``"auto"`` (default
+        policy by delta size), or force ``"push"`` / ``"warm"`` /
+        ``"rebuild"``.
+        """
+        if strategy not in ("auto", "push", "warm", "rebuild"):
+            raise ValueError(f"unknown strategy {strategy!r}")
+        plan = self._plan(delta)
+        if plan is None:
+            if self._pr is None:
+                self.run_tol(tol=tol, max_iters=max_iters)
+            return self._pr, UpdateInfo("noop", 0, 0, 0, 0, 0, 0.0, False)
+        # validate BEFORE committing any bookkeeping, so a raise leaves the
+        # engine exactly as it was (no half-applied delta)
+        patchable = (self.backend in PATCHABLE_BACKENDS
+                     and not plan["overflow"])
+        if strategy == "auto":
+            if (not patchable
+                    or plan["n_changed"] > self.rebuild_frac
+                    * max(plan["n_edges_before"], 1)):
+                strategy = "rebuild"
+            elif (self._pr is not None
+                    and plan["n_changed"] <= self.push_max_changed):
+                strategy = "push"
+            else:
+                strategy = "warm"
+        elif strategy in ("push", "warm") and not patchable:
+            raise ValueError(
+                f"strategy {strategy!r} needs a patchable layout "
+                f"(backend in {PATCHABLE_BACKENDS}, no capacity overflow)")
+        elif strategy == "push" and self._pr is None:
+            raise ValueError("push needs previous ranks; run/run_tol first")
+
+        # apply atomically: if the layout change or solve fails partway
+        # (allocation, device error), roll the whole engine back so the
+        # host bookkeeping and the device layout never describe different
+        # graphs.  A shallow attribute snapshot suffices — every field is
+        # replaced, never mutated in place, on the update path.
+        state = dict(self.__dict__)
+        try:
+            self._commit(plan)
+            if strategy == "rebuild":
+                self._rebuild()
+                rows = cols = 0
+            else:
+                rows, cols = self._patch(plan)
+            x0 = self._pr
+            if strategy == "push":
+                pr, iters, res = self._push(x0, tol, max_iters)
+                self._pr = pr
+            else:
+                pr, iters, res = self.run_tol(tol=tol, max_iters=max_iters,
+                                              x0=x0)
+        except BaseException:
+            self.__dict__.clear()
+            self.__dict__.update(state)
+            raise
+        return pr, UpdateInfo(strategy, plan["n_ins"], plan["n_del"],
+                              cols, rows, int(iters), float(res),
+                              bool(plan["overflow"]))
+
+    # ------------------------ host bookkeeping ------------------------- #
+    def _plan(self, delta: GraphDelta) -> dict | None:
+        """Canonicalize the delta against the current edge set and compute
+        the patch plan (affected rows/columns, post-delta key sets and
+        degrees, overflow flag) WITHOUT touching any engine state — or
+        return ``None`` for an effective no-op.  ``_commit`` applies it."""
+        n = self.n
+        delta = delta.canonical(n, symmetric=self.symmetric)
+        ins = edge_keys(delta.insert_src, delta.insert_dst, n)
+        dels = edge_keys(delta.delete_src, delta.delete_dst, n)
+        eff_ins = ins[~_in_sorted(self._keys, ins)]
+        eff_del = dels[_in_sorted(self._keys, dels)]
+        eff_del = eff_del[~_in_sorted(ins, eff_del)]   # delete-then-insert
+        changed = np.concatenate([eff_ins, eff_del])
+        if len(changed) == 0:
+            return None
+        new_keys = np.union1d(
+            np.setdiff1d(self._keys, eff_del, assume_unique=True), eff_ins)
+        rkey = lambda k: (k % n) * np.int64(n) + k // n
+        new_rkeys = np.union1d(
+            np.setdiff1d(self._rkeys, rkey(eff_del), assume_unique=True),
+            rkey(eff_ins))
+        outdeg, indeg = self._outdeg.copy(), self._indeg.copy()
+        np.add.at(outdeg, (eff_ins // n), 1)
+        np.add.at(outdeg, (eff_del // n), -1)
+        np.add.at(indeg, (eff_ins % n), 1)
+        np.add.at(indeg, (eff_del % n), -1)
+
+        cols = np.unique(changed // n)
+        rows = np.empty(0, np.int64)
+        overflow = False
+        if self.backend == "ell":
+            # only the row-major SELL layout patches rows (dense/Pallas
+            # rewrite whole columns), so only it pays the neighbor scans
+            parts = [changed % n]
+            for u in cols:
+                parts.append(_key_slice(self._keys, int(u), n))
+                parts.append(_key_slice(new_keys, int(u), n))
+            rows = np.unique(np.concatenate(parts))
+            k_low, k_high = self._sell_k
+            cap = np.where(self._sell_high[rows], k_high, k_low)
+            overflow = bool((indeg[rows] > cap).any())
+        return {"cols": cols, "rows": rows, "overflow": overflow,
+                "n_ins": len(eff_ins), "n_del": len(eff_del),
+                "n_changed": len(changed),
+                "n_edges_before": len(self._keys),
+                "keys": new_keys, "rkeys": new_rkeys,
+                "outdeg": outdeg, "indeg": indeg}
+
+    def _commit(self, plan: dict) -> None:
+        """Swap in the post-delta bookkeeping computed by ``_plan`` (only
+        after strategy validation passed, so no raise path can leave the
+        host state and the device layout describing different graphs)."""
+        self._keys = plan["keys"]
+        self._rkeys = plan["rkeys"]
+        self._outdeg = plan["outdeg"]
+        self._indeg = plan["indeg"]
+        self.n_edges = len(self._keys)
+        self.density = self.n_edges / float(self.n * self.n)
+
+    def _rebuild(self) -> None:
+        src = (self._keys // self.n).astype(np.int32)
+        dst = (self._keys % self.n).astype(np.int32)
+        self._prepare_layout(src, dst)
+
+    # -------------------------- layout patches ------------------------- #
+    def _column(self, u: int, fix_dangling: bool) -> np.ndarray:
+        """Recompute transition column ``u`` from the current edge set."""
+        col = np.zeros(self.n, np.float32)
+        nbrs = _key_slice(self._keys, u, self.n)
+        if len(nbrs):
+            col[nbrs] = 1.0 / len(nbrs)
+        elif fix_dangling:
+            col[:] = 1.0 / self.n
+        return col
+
+    def _patch(self, plan: dict) -> tuple[int, int]:
+        """Scatter the recomputed rows/columns into the prepared layout.
+        Returns ``(rows_patched, cols_patched)``."""
+        n = self.n
+        cols = plan["cols"]
+        flags = (self._outdeg[cols] == 0).astype(np.float32)
+        dang = self._dang
+        for ci, f in _chunks(cols, flags, cap=32):
+            dang = dang.at[jnp.asarray(ci)].set(jnp.asarray(f))
+        self._dang = dang
+        if self.backend == "dense":
+            mat = np.stack([self._column(int(u), fix_dangling=True)
+                            for u in cols], axis=0)        # (C, n)
+            ci, mats = _stack_chunks(cols, mat, cap=32)
+            H = _scatter_cols(self._operands[0], jnp.asarray(ci),
+                              jnp.asarray(mats), n=n)
+            self._operands = (H,)
+            return 0, len(cols)
+        if self.backend == "pallas_dense":
+            Hp, dangp = self._operands
+            mat = np.stack([self._column(int(u), fix_dangling=False)
+                            for u in cols], axis=0)        # (C, n)
+            ci, mats = _stack_chunks(cols, mat, cap=32)
+            Hp = _scatter_cols(Hp, jnp.asarray(ci), jnp.asarray(mats), n=n)
+            for ci, f in _chunks(cols, flags, cap=32):
+                dangp = dangp.at[0, jnp.asarray(ci)].set(jnp.asarray(f))
+            self._operands = (Hp, dangp)
+            return 0, len(cols)
+        # ell: rewrite every affected SELL row in its tier (vectorized: one
+        # gather over the reverse key set builds all rows at once)
+        rows = plan["rows"]
+        k_low, k_high = self._sell_k
+        dl, il, dh, ih, inv = self._operands
+        for tier, k, cap in ((False, k_low, 512), (True, k_high, 64)):
+            sel = rows[self._sell_high[rows] == tier]
+            if len(sel) == 0:
+                continue
+            data, idx = self._rebuild_rows(sel, k)
+            pos, dat, ix = _stack_chunks(self._sell_pos[sel], data, idx,
+                                         cap=cap)
+            pos = jnp.asarray(pos)
+            if tier:
+                dh = _scatter_rows(dh, pos, jnp.asarray(dat))
+                ih = _scatter_rows(ih, pos, jnp.asarray(ix))
+            else:
+                dl = _scatter_rows(dl, pos, jnp.asarray(dat))
+                il = _scatter_rows(il, pos, jnp.asarray(ix))
+        self._operands = (dl, il, dh, ih, inv)
+        return len(rows), len(cols)
+
+    def _rebuild_rows(self, sel: np.ndarray, k: int
+                      ) -> tuple[np.ndarray, np.ndarray]:
+        """Recompute the SELL rows ``sel`` (width ``k``) from the current
+        edge set — no per-row Python loop: one vectorized slice-gather over
+        the sorted reverse keys yields every (row, slot, col, val) at
+        once."""
+        n = self.n
+        sel64 = sel.astype(np.int64)
+        lo = np.searchsorted(self._rkeys, sel64 * n)
+        hi = np.searchsorted(self._rkeys, (sel64 + 1) * n)
+        cnt = hi - lo
+        total = int(cnt.sum())
+        data = np.zeros((len(sel), k), np.float32)
+        idx = np.zeros((len(sel), k), np.int32)
+        if total:
+            starts = np.concatenate([[0], np.cumsum(cnt)[:-1]])
+            slot = np.arange(total) - np.repeat(starts, cnt)
+            flat = np.repeat(lo, cnt) + slot
+            j = np.repeat(np.arange(len(sel)), cnt)
+            u = self._rkeys[flat] % n
+            data[j, slot] = 1.0 / self._outdeg[u]
+            idx[j, slot] = u
+        return data, idx
+
+    # ------------------------------ push -------------------------------- #
+    def _push(self, x0: jax.Array, tol: float, max_pushes: int):
+        if self.backend == "pallas_dense":
+            Hp, dangp = self._operands
+            return _push_pallas(Hp, dangp, self.d, jnp.float32(tol),
+                                jnp.asarray(x0), n=self.n,
+                                block_n=self._block[0],
+                                block_m=self._block[1],
+                                interpret=self.interpret,
+                                max_pushes=max_pushes)
+        return _push_tol(self._operands, self._dang, self.d,
+                         jnp.float32(tol), jnp.asarray(x0),
+                         backend=self._mv_backend, n=self.n,
+                         max_pushes=max_pushes)

@@ -54,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.graph import delta as delta_mod
 from repro.graph import transition as tr
 from repro.kernels import ops as kops
 from repro.kernels.pagerank_step import (pad_pagerank_operands,
@@ -118,10 +119,10 @@ def _dedupe_edges(src: np.ndarray, dst: np.ndarray,
     """Collapse duplicate directed edges.  The engine's contract is a *set*
     of edges: without this, a repeated (u, v) inflates outdeg(u) in the
     dense builder but contributes multiple summed entries in CSR/ELL, and
-    the tiers silently disagree."""
-    key = src.astype(np.int64) * int(n) + dst.astype(np.int64)
-    uniq = np.unique(key)
-    return ((uniq // n).astype(np.int32), (uniq % n).astype(np.int32))
+    the tiers silently disagree.  Delegates to the shared canonicalizer in
+    :mod:`repro.graph.delta`; self-loops are kept — the transition
+    builders support them."""
+    return delta_mod.dedupe_directed(src, dst, n, drop_self_loops=False)
 
 
 # --------------------------------------------------------------------------- #
@@ -169,6 +170,18 @@ def _matvec(backend: str, operands, x: jax.Array) -> jax.Array:
             tail = jax.ops.segment_sum(ov_v[:, None] * x[ov_c], ov_r,
                                        num_segments=n)
         return y + tail
+    if backend == "sell":
+        # two-bucket sliced ELLPACK (the dynamic engine's patchable ELL
+        # tier, repro.pagerank.dynamic): rows permuted into a low tier and
+        # a hub tier, two dense gathers, no segment_sum
+        dl, il, dh, ih, inv = operands
+        if x.ndim == 1:
+            yl = jnp.sum(dl * x[il], axis=1)
+            yh = jnp.sum(dh * x[ih], axis=1)
+        else:
+            yl = jnp.sum(dl[..., None] * x[il], axis=1)
+            yh = jnp.sum(dh[..., None] * x[ih], axis=1)
+        return jnp.concatenate([yl, yh], axis=0)[inv]
     if backend == "bsr":
         bsr = operands[0]
         return bsr.matvec(x) if x.ndim == 1 else bsr.matmat(x)
@@ -188,9 +201,9 @@ def _run_fixed(operands, dang, d, *, backend: str, n: int, n_iters: int):
 
 
 @partial(jax.jit, static_argnames=("backend", "n", "max_iters"))
-def _run_tol(operands, dang, d, tol, *, backend: str, n: int,
+def _run_tol(operands, dang, d, tol, x0, *, backend: str, n: int,
              max_iters: int):
-    pr0 = jnp.full((n,), 1.0 / n, jnp.float32)
+    pr0 = jnp.full((n,), 1.0 / n, jnp.float32) if x0 is None else x0
 
     def step(pr):
         return sparse_step(lambda v: _matvec(backend, operands, v),
@@ -246,11 +259,11 @@ def _run_fixed_dense_sharded(H, dang, *, mesh, axes, n_true, n_iters, d):
 
 @partial(jax.jit, static_argnames=("mesh", "axes", "n_true", "max_iters",
                                    "d"))
-def _run_tol_dense_sharded(H, dang, tol, *, mesh, axes, n_true, max_iters,
-                           d):
+def _run_tol_dense_sharded(H, dang, tol, x0, *, mesh, axes, n_true,
+                           max_iters, d):
     pr, iters, res = dist.pagerank_distributed_tol(
         H, mesh, tol=tol, max_iters=max_iters, d=d, row_axis=axes[0],
-        col_axis=axes[1], dangling=dang, n_true=n_true)
+        col_axis=axes[1], dangling=dang, n_true=n_true, x0=x0)
     return pr[:n_true], iters, res
 
 
@@ -274,11 +287,11 @@ def _run_fixed_ell_sharded(data, idx, dang, *, mesh, axes, n_true, n_iters,
 
 @partial(jax.jit, static_argnames=("mesh", "axes", "n_true", "max_iters",
                                    "d"))
-def _run_tol_ell_sharded(data, idx, dang, tol, *, mesh, axes, n_true,
+def _run_tol_ell_sharded(data, idx, dang, tol, x0, *, mesh, axes, n_true,
                          max_iters, d):
     pr, iters, res = dist.pagerank_distributed_sparse_tol(
         data, idx, mesh, tol=tol, max_iters=max_iters, d=d, dangling=dang,
-        axes=axes, n_true=n_true)
+        axes=axes, n_true=n_true, x0=x0)
     return pr[:n_true], iters, res
 
 
@@ -314,10 +327,11 @@ def _run_fixed_pallas(Hp, dangp, *, n: int, n_iters: int, d: float,
 
 @partial(jax.jit, static_argnames=("n", "max_iters", "d", "block_n",
                                    "block_m", "interpret"))
-def _run_tol_pallas(Hp, dangp, tol, *, n: int, max_iters: int, d: float,
+def _run_tol_pallas(Hp, dangp, tol, x0, *, n: int, max_iters: int, d: float,
                     block_n: int, block_m: int, interpret: bool):
     Mp = Hp.shape[1]
-    xp0 = jnp.pad(jnp.full((n,), 1.0 / n, jnp.float32), (0, Mp - n))[None, :]
+    x0 = jnp.full((n,), 1.0 / n, jnp.float32) if x0 is None else x0
+    xp0 = jnp.pad(x0, (0, Mp - n))[None, :]
     t0 = d * jnp.sum(xp0 * dangp) / n + (1.0 - d) / n
 
     def cond(state):
@@ -400,13 +414,32 @@ class PageRankEngine:
         if self.backend not in BACKENDS:
             raise ValueError(
                 f"backend {self.backend!r} not in {BACKENDS + ('auto',)}")
+        self._block_arg = (block_n, block_m)
+        self._bsr_block_size = bsr_block_size
+        self._ell_k = ell_k
+        self._mesh_arg = mesh
+        self._prepare_layout(src, dst)
 
+    def _prepare_layout(self, src: np.ndarray, dst: np.ndarray) -> None:
+        """Build (or rebuild) the backend's prepared device layout from a
+        deduplicated COO edge list.  Split out of ``__init__`` so the
+        dynamic-graph subsystem (:mod:`repro.pagerank.dynamic`) can fall
+        back to a full layout rebuild when an edge delta is too large — or
+        structurally too disruptive — to patch in place."""
+        n = self.n
+        block_n, block_m = self._block_arg
+        bsr_block_size, ell_k, mesh = (self._bsr_block_size, self._ell_k,
+                                       self._mesh_arg)
         self._dang = jnp.asarray(tr.dangling_mask(src, n).astype(np.float32))
-        self._block = (block_n, block_m)
+        self._block = self._block_arg
         self.mesh = None
         self._axes: tuple[str, ...] = ()
         self._n_pad = self.n
         self._ppr_operands: tuple | None = None
+        # the layout tag the generic jitted runners dispatch _matvec on —
+        # normally the backend itself; the dynamic engine's patchable SELL
+        # tier overrides it while keeping backend == "ell"
+        self._mv_backend = self.backend
         self.layout = self.backend
         if self.backend == "dense":
             self._operands = (tr.build_transition_dense(src, dst, n),)
@@ -491,7 +524,7 @@ class PageRankEngine:
                 block_n=self._block[0], block_m=self._block[1],
                 interpret=self.interpret)
         return _run_fixed.lower(self._operands, self._dang, self.d,
-                                backend=self.backend, n=self.n,
+                                backend=self._mv_backend, n=self.n,
                                 n_iters=n_iters)
 
     # ------------------------------ queries ------------------------------ #
@@ -516,33 +549,49 @@ class PageRankEngine:
             return pagerank_dense_fixed(self._operands[0], n_iters=n_iters,
                                         d=self.d)
         return _run_fixed(self._operands, self._dang, self.d,
-                          backend=self.backend, n=self.n, n_iters=n_iters)
+                          backend=self._mv_backend, n=self.n,
+                          n_iters=n_iters)
 
-    def run_tol(self, tol: float = 1e-6, max_iters: int = 1000):
+    def run_tol(self, tol: float = 1e-6, max_iters: int = 1000,
+                x0: np.ndarray | jax.Array | None = None):
         """Tolerance-terminated power iteration; one compiled dispatch.
-        Returns ``(pr, n_iters, residual)``."""
+        Returns ``(pr, n_iters, residual)``.
+
+        ``x0`` warm-starts the loop from a previous rank vector (shape
+        ``(n,)``); ``None`` keeps the classic uniform cold start.  After a
+        small graph change the previous ranks are an excellent initial
+        state, so the dynamic-graph refresh path converges in a fraction
+        of the cold iteration count."""
+        x0 = None if x0 is None else jnp.asarray(x0, jnp.float32)
         if self.backend == "dense_sharded":
             return _run_tol_dense_sharded(
                 self._operands[0], self._dang, jnp.float32(tol),
-                mesh=self.mesh, axes=self._axes, n_true=self.n,
-                max_iters=max_iters, d=self.d)
+                self._pad_x0(x0), mesh=self.mesh, axes=self._axes,
+                n_true=self.n, max_iters=max_iters, d=self.d)
         if self.backend == "ell_sharded":
             return _run_tol_ell_sharded(
                 *self._operands, self._dang, jnp.float32(tol),
-                mesh=self.mesh, axes=self._axes, n_true=self.n,
-                max_iters=max_iters, d=self.d)
+                self._pad_x0(x0), mesh=self.mesh, axes=self._axes,
+                n_true=self.n, max_iters=max_iters, d=self.d)
         if self.backend == "pallas_dense":
             Hp, dangp = self._operands
             return _run_tol_pallas(
-                Hp, dangp, jnp.float32(tol), n=self.n, max_iters=max_iters,
-                d=self.d, block_n=self._block[0], block_m=self._block[1],
-                interpret=self.interpret)
+                Hp, dangp, jnp.float32(tol), x0, n=self.n,
+                max_iters=max_iters, d=self.d, block_n=self._block[0],
+                block_m=self._block[1], interpret=self.interpret)
         if self.backend == "dense":
             return pagerank_dense(self._operands[0], d=self.d, tol=tol,
-                                  max_iters=max_iters)
+                                  max_iters=max_iters, x0=x0)
         return _run_tol(self._operands, self._dang, self.d,
-                        jnp.float32(tol), backend=self.backend, n=self.n,
-                        max_iters=max_iters)
+                        jnp.float32(tol), x0, backend=self._mv_backend,
+                        n=self.n, max_iters=max_iters)
+
+    def _pad_x0(self, x0: jax.Array | None) -> jax.Array | None:
+        """Zero-pad a warm-start vector up to the sharded tiers' padded N
+        (pad entries never feed back into real ranks)."""
+        if x0 is None or self._n_pad == self.n:
+            return x0
+        return jnp.pad(x0, (0, self._n_pad - self.n))
 
     def ppr(self, seed_sets: Sequence[np.ndarray],
             n_iters: int = 100) -> jax.Array:
@@ -590,4 +639,5 @@ class PageRankEngine:
                 d=self.d, block_n=self._block[0], block_m=self._block[1],
                 interpret=self.interpret)
         return _run_ppr(self._operands, self._dang, jnp.asarray(V), self.d,
-                        backend=self.backend, n=self.n, n_iters=n_iters)
+                        backend=self._mv_backend, n=self.n,
+                        n_iters=n_iters)

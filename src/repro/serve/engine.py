@@ -156,14 +156,26 @@ class PageRankQueryEngine:
     share each sweep over H instead of paying Q independent power
     iterations (the MELOPPR batching).  Host logic is only the queue; the
     device work is a single whole-loop-compiled dispatch per flush.
+
+    **Live refresh** — when the engine is a
+    :class:`~repro.pagerank.dynamic.DynamicPageRankEngine`, streamed edge
+    deltas queue up via :meth:`push_update` and are folded into the
+    prepared layouts (``engine.update``) by :meth:`refresh`.  ``flush``
+    always refreshes first, so every served batch — including queries that
+    were already in flight when the delta arrived — sees ranks no staler
+    than one refresh interval.
     """
 
     def __init__(self, engine: PageRankEngine, n_iters: int = 100,
-                 max_batch: int = 8):
+                 max_batch: int = 8, refresh_tol: float = 1e-6):
         self.engine = engine
         self.n_iters = n_iters
         self.max_batch = max_batch
+        self.refresh_tol = refresh_tol
         self._queue: list[PPRQuery] = []
+        self._pending_deltas: list = []
+        self.n_refreshes = 0
+        self.last_update_info = None
 
     def submit(self, uid: int, seeds, top_k: int = 10) -> PPRQuery:
         """Queue one user's query; flushed automatically at ``max_batch``.
@@ -180,8 +192,47 @@ class PageRankQueryEngine:
             self.flush()
         return q
 
+    def push_update(self, delta) -> None:
+        """Queue a streamed :class:`~repro.graph.delta.GraphDelta`; it is
+        folded into the graph at the next :meth:`refresh`/:meth:`flush`,
+        before any queued query is served.  Like ``submit`` for seed sets,
+        a malformed delta (out-of-range node ids) is rejected HERE, before
+        it can poison the pending batch."""
+        if not hasattr(self.engine, "update"):
+            raise TypeError(
+                "push_update needs a DynamicPageRankEngine; "
+                f"got a static {type(self.engine).__name__}")
+        self._pending_deltas.append(
+            delta.canonical(self.engine.n, symmetric=self.engine.symmetric))
+
+    def refresh(self) -> list:
+        """Apply every pending delta to the live engine now — coalesced
+        into ONE update (``graph.delta.compose`` keeps the in-order
+        semantics), so a backlog of k stream ticks costs one solve, not k.
+        Returns the :class:`~repro.pagerank.dynamic.UpdateInfo` records
+        (one entry when anything was pending).  If the update itself
+        fails, the deltas are re-queued so no accepted change is lost."""
+        from repro.graph.delta import compose
+        deltas, self._pending_deltas = self._pending_deltas, []
+        if not deltas:
+            return []
+        merged = deltas[0] if len(deltas) == 1 else compose(
+            deltas, self.engine.n, symmetric=self.engine.symmetric)
+        try:
+            _, info = self.engine.update(merged, tol=self.refresh_tol)
+        except Exception:
+            self._pending_deltas = deltas + self._pending_deltas
+            raise
+        self.n_refreshes += 1
+        self.last_update_info = info
+        return [info]
+
     def flush(self) -> list[PPRQuery]:
-        """Serve every queued query with one batched device dispatch."""
+        """Serve every queued query with one batched device dispatch —
+        after folding in any pending graph deltas, so in-flight queries
+        never see ranks staler than one refresh interval."""
+        if self._pending_deltas:
+            self.refresh()
         batch, self._queue = self._queue, []
         if not batch:
             return []

@@ -90,3 +90,19 @@ def test_committed_bench_artifact_claims_hold():
     for name, v in engine_diffs.items():
         assert v <= 1e-5, f"{name}={v:.2e} breaks the <=1e-5 claim"
     assert report["claim"]["diff_le_1e-5"] is True
+
+
+def test_committed_bench_artifact_dynamic_claims_hold():
+    """The ``dynamic`` block (benchmarks/dynamic_bench.py) must keep the
+    acceptance claims: a 10-edge delta refresh ≥5x faster than full
+    rebuild+rerun and within 1e-5 L1 of the from-scratch oracle."""
+    with open(BENCH_PATH) as f:
+        dyn = json.load(f)["dynamic"]
+    assert dyn["delta_edges"] == 10 and dyn["n"] == 5000
+    assert dyn["claim"]["meets_5x"] is True
+    assert dyn["claim"]["l1_le_1e-5"] is True
+    assert dyn["l1_update_vs_scratch"] <= 1e-5
+    assert dyn["rebuild_rerun_ms"] / dyn["update_ms"] >= 5.0
+    # the crossover sweep must exercise every strategy of the auto policy
+    assert {r["strategy"] for r in dyn["delta_size_sweep"]} == {
+        "push", "warm", "rebuild"}

@@ -97,3 +97,33 @@ def test_edge_list_loader(tmp_path):
     p.write_text("# comment\n0 1\n1 2\n2 0\n")
     src, dst, n = gen.load_edge_list(str(p))
     assert n == 3 and len(src) == 6      # symmetrized
+
+
+def test_edge_list_loader_dedupes_at_ingestion(tmp_path):
+    """Regression for the ingestion boundary of the PR 3 duplicate-collapse
+    fix: a dump with repeated lines, reversed duplicates, and self-loops
+    must round-trip to the same engine ranks as the clean in-memory edge
+    list — multigraph noise in a real file may never skew outdegrees."""
+    from repro.pagerank import PageRankEngine
+    n = 30
+    src, dst = gen.erdos_renyi(n, avg_degree=4.0, seed=9)
+    rng = np.random.default_rng(0)
+    pick = rng.integers(0, len(src), size=len(src))
+    lines = [f"{a} {b}" for a, b in zip(src, dst)]
+    lines += [f"{src[k]} {dst[k]}" for k in pick]        # duplicate lines
+    lines += [f"{dst[k]} {src[k]}" for k in pick[:5]]    # reversed dups
+    lines += [f"{v} {v}" for v in range(0, n, 7)]        # self-loops
+    rng.shuffle(lines)
+    p = tmp_path / "noisy_edges.txt"
+    p.write_text("# noisy hu.MAP-style dump\n" + "\n".join(lines) + "\n")
+    ls, ld, ln = gen.load_edge_list(str(p), n=n)
+    assert ln == n
+    # loader output is already canonical: no self-loops, no duplicates
+    assert np.all(ls != ld)
+    keys = ls.astype(np.int64) * n + ld
+    assert len(np.unique(keys)) == len(keys)
+    for backend in ("dense", "ell"):
+        pr_file = PageRankEngine(ls, ld, n, backend=backend).run(50)
+        pr_mem = PageRankEngine(src, dst, n, backend=backend).run(50)
+        np.testing.assert_array_equal(np.asarray(pr_file),
+                                      np.asarray(pr_mem))
