@@ -56,8 +56,9 @@ def _delta_sweep(base, n: int,
     for size in sizes:
         eng = DynamicPageRankEngine(base[0], base[1], n, backend="ell")
         eng.run_tol(1e-7)[0].block_until_ready()
-        pairs = rng.integers(0, n, size=(size, 2))
-        delta = GraphDelta.inserts(pairs[:, 0], pairs[:, 1])
+        pu = rng.integers(0, n, size=size)
+        pv = (pu + rng.integers(1, n, size=size)) % n  # no self-loops
+        delta = GraphDelta.inserts(pu, pv)
         eng.update(delta)[0].block_until_ready()         # compile warmup
         eng2 = DynamicPageRankEngine(base[0], base[1], n, backend="ell")
         eng2.run_tol(1e-7)[0].block_until_ready()

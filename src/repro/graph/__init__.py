@@ -5,10 +5,15 @@ from repro.graph.transition import (build_transition_dense,
                                     build_transition_bsr, dangling_fix)
 from repro.graph.sparse import CSRMatrix, ELLMatrix, BSRMatrix
 from repro.graph.delta import EdgeStream, GraphDelta, apply_delta
+from repro.graph.validate import (DeadLetter, DeadLetterQueue, DeltaRejected,
+                                  ValidationPolicy, ValidationResult,
+                                  validate_delta)
 
 __all__ = [
     "barabasi_albert", "erdos_renyi", "protein_network",
     "build_transition_dense", "build_transition_ell", "build_transition_bsr",
     "dangling_fix", "CSRMatrix", "ELLMatrix", "BSRMatrix",
     "EdgeStream", "GraphDelta", "apply_delta",
+    "DeadLetter", "DeadLetterQueue", "DeltaRejected", "ValidationPolicy",
+    "ValidationResult", "validate_delta",
 ]

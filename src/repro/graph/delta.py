@@ -64,19 +64,62 @@ class GraphDelta:
     delete_dst: np.ndarray
     timestamp: float = 0.0
 
+    def __post_init__(self):
+        """Strict construction: malformed deltas used to sail through and
+        blow up deep inside layout patching (or not at all) — reject them
+        here with a clear error.  Checks: matching src/dst lengths,
+        integral finite ids, no negative ids, no self-loops.  Range
+        against ``n`` stays in :meth:`canonical` (a delta does not know
+        its graph size).  Arrays are normalized to 1-D int32.  Untrusted
+        streams should screen with :func:`repro.graph.validate.
+        validate_delta` instead of catching this."""
+        for side in ("insert", "delete"):
+            src = np.atleast_1d(np.asarray(getattr(self, f"{side}_src")))
+            dst = np.atleast_1d(np.asarray(getattr(self, f"{side}_dst")))
+            if src.shape[0] != dst.shape[0]:
+                raise ValueError(
+                    f"GraphDelta {side} src/dst length mismatch: "
+                    f"{src.shape[0]} vs {dst.shape[0]}")
+            for name, arr in ((f"{side}_src", src), (f"{side}_dst", dst)):
+                if np.issubdtype(arr.dtype, np.floating):
+                    a = arr.astype(np.float64)
+                    if arr.size and not np.isfinite(a).all():
+                        raise ValueError(
+                            f"GraphDelta {name} has non-finite entries")
+                    if arr.size and (a != np.floor(a)).any():
+                        raise ValueError(
+                            f"GraphDelta {name} has non-integral entries")
+                elif not np.issubdtype(arr.dtype, np.integer):
+                    raise ValueError(
+                        f"GraphDelta {name} must hold integer node ids, "
+                        f"got dtype {arr.dtype}")
+            src = src.astype(np.int32)
+            dst = dst.astype(np.int32)
+            if src.size and (src.min() < 0 or dst.min() < 0):
+                raise ValueError(
+                    f"GraphDelta {side} edges name negative node ids")
+            if src.size and (src == dst).any():
+                k = int(np.argmax(src == dst))
+                raise ValueError(
+                    f"GraphDelta {side} edges contain self-loop "
+                    f"({int(src[k])}, {int(dst[k])}); self-loops are not "
+                    f"part of the undirected-edge dialect")
+            object.__setattr__(self, f"{side}_src", src)
+            object.__setattr__(self, f"{side}_dst", dst)
+
     @classmethod
     def inserts(cls, src, dst, timestamp: float = 0.0) -> "GraphDelta":
         e = np.empty(0, np.int32)
-        return cls(np.atleast_1d(np.asarray(src, np.int32)),
-                   np.atleast_1d(np.asarray(dst, np.int32)),
+        return cls(np.atleast_1d(np.asarray(src)),
+                   np.atleast_1d(np.asarray(dst)),
                    e, e.copy(), timestamp)
 
     @classmethod
     def deletes(cls, src, dst, timestamp: float = 0.0) -> "GraphDelta":
         e = np.empty(0, np.int32)
         return cls(e, e.copy(),
-                   np.atleast_1d(np.asarray(src, np.int32)),
-                   np.atleast_1d(np.asarray(dst, np.int32)), timestamp)
+                   np.atleast_1d(np.asarray(src)),
+                   np.atleast_1d(np.asarray(dst)), timestamp)
 
     @property
     def n_insert(self) -> int:

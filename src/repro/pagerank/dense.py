@@ -16,29 +16,53 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.pagerank.resilience import watchdog_init, watchdog_update
 from repro.pagerank.steps import dense_step
 
 
-@partial(jax.jit, static_argnames=("max_iters",))
+@partial(jax.jit, static_argnames=("max_iters", "watchdog"))
 def pagerank_dense(H: jax.Array, d: float = 0.85, tol: float = 1e-6,
-                   max_iters: int = 1000, x0: jax.Array | None = None):
-    """Returns (pr, n_iters, residual).  ``x0`` warm-starts the loop from a
-    previous rank vector; ``None`` is the classic uniform cold start."""
+                   max_iters: int = 1000, x0: jax.Array | None = None,
+                   watchdog: bool = True):
+    """Returns ``(pr, n_iters, residual, grow)``.  ``x0`` warm-starts the
+    loop from a previous rank vector; ``None`` is the classic uniform cold
+    start.  ``watchdog`` (default on) aborts on NaN/Inf or sustained
+    residual growth instead of spinning to ``max_iters``; ``grow`` is the
+    watchdog's consecutive-growth counter at exit (0 when healthy), which
+    :func:`repro.pagerank.resilience.make_solve_info` turns into the
+    ``diverged`` flag."""
     n = H.shape[0]
     pr0 = jnp.full((n,), 1.0 / n, H.dtype) if x0 is None else x0
 
+    if not watchdog:
+        def cond(state):
+            _, i, res = state
+            return (res > tol) & (i < max_iters)
+
+        def body(state):
+            pr, i, _ = state
+            new = dense_step(H, pr, d)
+            return new, i + 1, jnp.sum(jnp.abs(new - pr))
+
+        pr, iters, res = jax.lax.while_loop(
+            cond, body, (pr0, jnp.int32(0), jnp.asarray(jnp.inf, H.dtype)))
+        return pr, iters, res, jnp.int32(0)
+
     def cond(state):
-        _, i, res = state
-        return (res > tol) & (i < max_iters)
+        _, i, res, _, ok = state
+        return (res > tol) & (i < max_iters) & ok
 
     def body(state):
-        pr, i, _ = state
+        pr, i, res, grow, _ = state
         new = dense_step(H, pr, d)
-        return new, i + 1, jnp.sum(jnp.abs(new - pr))
+        new_res = jnp.sum(jnp.abs(new - pr))
+        grow, ok = watchdog_update(new_res, res, grow)
+        return new, i + 1, new_res, grow, ok
 
-    pr, iters, res = jax.lax.while_loop(
-        cond, body, (pr0, jnp.int32(0), jnp.asarray(jnp.inf, H.dtype)))
-    return pr, iters, res
+    pr, iters, res, grow, _ = jax.lax.while_loop(
+        cond, body, (pr0, jnp.int32(0), jnp.asarray(jnp.inf, H.dtype),
+                     *watchdog_init()))
+    return pr, iters, res, grow
 
 
 @partial(jax.jit, static_argnames=("n_iters",))

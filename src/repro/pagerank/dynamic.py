@@ -57,6 +57,8 @@ from repro.graph import transition as tr
 from repro.graph.delta import GraphDelta, edge_keys
 from repro.kernels.streaming_matvec import streaming_matvec
 from repro.pagerank.engine import PageRankEngine, _dedupe_edges, _matvec
+from repro.pagerank.resilience import (EngineSnapshot, make_solve_info,
+                                       watchdog_init, watchdog_update)
 
 __all__ = ["DynamicPageRankEngine", "UpdateInfo", "PATCHABLE_BACKENDS"]
 
@@ -77,6 +79,17 @@ class UpdateInfo:
     iters: int                    # push sweeps or warm/rebuild iterations
     residual: float
     overflow: bool                # an ELL row outgrew its capacity slack
+    # convergence-watchdog verdict of the refresh solve (defaults keep
+    # positional construction of the original eight fields working)
+    diverged: bool = False
+    nonfinite: bool = False
+
+    @property
+    def healthy(self) -> bool:
+        """The refresh solve's rank vector is trustworthy (no watchdog
+        abort).  A committed-but-unhealthy update is what escalates the
+        resilient refresh ladder to a full rebuild."""
+        return not (self.diverged or self.nonfinite)
 
 
 def _in_sorted(sorted_keys: np.ndarray, vals: np.ndarray) -> np.ndarray:
@@ -163,21 +176,31 @@ def _push_loop(Ab, x0, tol, n, max_pushes):
     ``|r| ≥ tol/n`` (whenever ``‖r‖₁ > tol`` at least one entry qualifies,
     so the loop cannot stall) and refreshes the residual from scratch —
     one operator sweep per push round, same cost as an incremental
-    residual update but immune to float drift in the bookkeeping."""
+    residual update but immune to float drift in the bookkeeping.
+
+    Carries the same convergence watchdog as the engine's tolerance loops
+    (NaN/Inf and sustained residual-growth abort; a corrupted layout makes
+    the push residual *grow* every sweep, so without the watchdog the loop
+    spins all ``max_pushes``).  Returns ``(x, iters, residual, grow)``."""
     thresh = tol / n
 
     def cond(state):
-        _, r, i = state
-        return (jnp.sum(jnp.abs(r)) > tol) & (i < max_pushes)
+        _, _, i, res, _, ok = state
+        return (res > tol) & (i < max_pushes) & ok
 
     def body(state):
-        x, r, i = state
+        x, r, i, res, grow, _ = state
         x = x + r * (jnp.abs(r) >= thresh).astype(x.dtype)
-        return x, Ab(x) - x, i + 1
+        r = Ab(x) - x
+        new_res = jnp.sum(jnp.abs(r))
+        grow, ok = watchdog_update(new_res, res, grow)
+        return x, r, i + 1, new_res, grow, ok
 
-    x, r, iters = jax.lax.while_loop(cond, body, (x0, Ab(x0) - x0,
-                                                  jnp.int32(0)))
-    return x, iters, jnp.sum(jnp.abs(r))
+    r0 = Ab(x0) - x0
+    x, r, iters, res, grow, _ = jax.lax.while_loop(
+        cond, body, (x0, r0, jnp.int32(0), jnp.sum(jnp.abs(r0)),
+                     *watchdog_init()))
+    return x, iters, res, grow
 
 
 @partial(jax.jit, static_argnames=("backend", "n", "max_pushes"))
@@ -213,8 +236,8 @@ def _push_pallas(Hp, dangp, d, tol, x0, *, n: int, block_n: int,
         leak = jnp.sum(xp * dangp)
         return d * (y + leak / n * real) + (1.0 - d) / n * real
 
-    xp, iters, res = _push_loop(Ab, xp0, tol, n, max_pushes)
-    return xp[0, :n], iters, res
+    xp, iters, res, grow = _push_loop(Ab, xp0, tol, n, max_pushes)
+    return xp[0, :n], iters, res, grow
 
 
 # --------------------------------------------------------------------------- #
@@ -327,10 +350,50 @@ class DynamicPageRankEngine(PageRankEngine):
         return pr
 
     def run_tol(self, tol: float = 1e-6, max_iters: int = 1000,
-                x0: np.ndarray | jax.Array | None = None):
-        out = super().run_tol(tol, max_iters, x0)
+                x0: np.ndarray | jax.Array | None = None, **kw):
+        out = super().run_tol(tol, max_iters, x0, **kw)
         self._pr = out[0]
         return out
+
+    # ------------------- snapshots & recovery hooks -------------------- #
+    def snapshot(self) -> EngineSnapshot:
+        """Host-side copy of everything needed to rebuild this engine: the
+        sorted edge-key set and the latest ranks.  Device layouts are
+        derived state — :meth:`restore` reconstructs them — so a snapshot
+        taken *before* device-side corruption restores a healthy engine."""
+        return EngineSnapshot(
+            keys=np.asarray(self._keys, np.int64).copy(),
+            ranks=(None if self._pr is None
+                   else np.asarray(self._pr, np.float32).copy()),
+            residual=0.0)
+
+    def restore(self, snap: EngineSnapshot) -> None:
+        """Roll the engine back to ``snap``: rebuild the host bookkeeping
+        and every prepared device layout from the snapshot's edge keys and
+        reinstate its ranks.  The escalation ladder's last rung."""
+        n = self.n
+        keys = np.sort(np.asarray(snap.keys, np.int64))
+        src = (keys // n).astype(np.int32)
+        dst = (keys % n).astype(np.int32)
+        self._keys = keys
+        self._rkeys = np.sort((keys % n) * np.int64(n) + keys // n)
+        self._outdeg = np.bincount(src, minlength=n).astype(np.int64)
+        self._indeg = np.bincount(dst, minlength=n).astype(np.int64)
+        self.n_edges = len(keys)
+        self.density = self.n_edges / float(n * n)
+        self._prepare_layout(src, dst)
+        self._pr = (None if snap.ranks is None
+                    else jnp.asarray(snap.ranks, jnp.float32))
+
+    def rebuild_and_solve(self, tol: float = 1e-6, max_iters: int = 1000,
+                          x0: np.ndarray | jax.Array | None = None, **kw):
+        """Rebuild every prepared device layout from the (authoritative)
+        host edge keys and re-solve — the recovery path for device-side
+        layout corruption, where the edge set is still correct but the
+        prepared arrays are not.  ``x0`` warm-starts from known-good ranks
+        (e.g. the last snapshot).  Returns the ``run_tol`` result."""
+        self._rebuild()
+        return self.run_tol(tol=tol, max_iters=max_iters, x0=x0, **kw)
 
     # --------------------------- the update ---------------------------- #
     def update(self, delta: GraphDelta, *, tol: float = 1e-6,
@@ -385,7 +448,9 @@ class DynamicPageRankEngine(PageRankEngine):
                 rows, cols = self._patch(plan)
             x0 = self._pr
             if strategy == "push":
-                pr, iters, res = self._push(x0, tol, max_iters)
+                pr, iters, res, grow = self._push(x0, tol, max_iters)
+                self.last_solve_info = make_solve_info(
+                    iters, res, grow, tol=tol, max_iters=max_iters)
                 self._pr = pr
             else:
                 pr, iters, res = self.run_tol(tol=tol, max_iters=max_iters,
@@ -394,9 +459,12 @@ class DynamicPageRankEngine(PageRankEngine):
             self.__dict__.clear()
             self.__dict__.update(state)
             raise
+        solve = self.last_solve_info
         return pr, UpdateInfo(strategy, plan["n_ins"], plan["n_del"],
                               cols, rows, int(iters), float(res),
-                              bool(plan["overflow"]))
+                              bool(plan["overflow"]),
+                              diverged=solve.diverged,
+                              nonfinite=solve.nonfinite)
 
     # ------------------------ host bookkeeping ------------------------- #
     def _plan(self, delta: GraphDelta) -> dict | None:

@@ -46,6 +46,7 @@ two bit-identical.
 from __future__ import annotations
 
 import math
+import warnings
 from functools import partial
 from typing import Sequence
 
@@ -63,6 +64,9 @@ from repro.kernels.streaming_matvec import streaming_matvec
 from repro.launch.mesh import make_mesh
 from repro.pagerank import distributed as dist
 from repro.pagerank.dense import pagerank_dense, pagerank_dense_fixed
+from repro.pagerank.resilience import (ConvergenceError, SolveResult,
+                                       make_solve_info, watchdog_init,
+                                       watchdog_update)
 from repro.pagerank.steps import (dense_step, ppr_step, ppr_step_batched,
                                   seed_matrix, sparse_step)
 
@@ -200,26 +204,47 @@ def _run_fixed(operands, dang, d, *, backend: str, n: int, n_iters: int):
     return pr
 
 
-@partial(jax.jit, static_argnames=("backend", "n", "max_iters"))
+@partial(jax.jit, static_argnames=("backend", "n", "max_iters", "watchdog"))
 def _run_tol(operands, dang, d, tol, x0, *, backend: str, n: int,
-             max_iters: int):
+             max_iters: int, watchdog: bool = True):
+    """Returns ``(pr, iters, residual, grow)`` — ``grow`` is the
+    convergence watchdog's consecutive-growth counter at exit (0 with
+    ``watchdog=False``, the overhead-measurement baseline)."""
     pr0 = jnp.full((n,), 1.0 / n, jnp.float32) if x0 is None else x0
 
     def step(pr):
         return sparse_step(lambda v: _matvec(backend, operands, v),
                            pr, dang, d, n)
 
+    if not watchdog:
+        def cond(state):
+            _, i, res = state
+            return (res > tol) & (i < max_iters)
+
+        def body(state):
+            pr, i, _ = state
+            new = step(pr)
+            return new, i + 1, jnp.sum(jnp.abs(new - pr))
+
+        pr, iters, res = jax.lax.while_loop(
+            cond, body, (pr0, jnp.int32(0), jnp.float32(jnp.inf)))
+        return pr, iters, res, jnp.int32(0)
+
     def cond(state):
-        _, i, res = state
-        return (res > tol) & (i < max_iters)
+        _, i, res, _, ok = state
+        return (res > tol) & (i < max_iters) & ok
 
     def body(state):
-        pr, i, _ = state
+        pr, i, res, grow, _ = state
         new = step(pr)
-        return new, i + 1, jnp.sum(jnp.abs(new - pr))
+        new_res = jnp.sum(jnp.abs(new - pr))
+        grow, ok = watchdog_update(new_res, res, grow)
+        return new, i + 1, new_res, grow, ok
 
-    return jax.lax.while_loop(
-        cond, body, (pr0, jnp.int32(0), jnp.float32(jnp.inf)))
+    pr, iters, res, grow, _ = jax.lax.while_loop(
+        cond, body, (pr0, jnp.int32(0), jnp.float32(jnp.inf),
+                     *watchdog_init()))
+    return pr, iters, res, grow
 
 
 @partial(jax.jit, static_argnames=("backend", "n", "n_iters"))
@@ -258,13 +283,14 @@ def _run_fixed_dense_sharded(H, dang, *, mesh, axes, n_true, n_iters, d):
 
 
 @partial(jax.jit, static_argnames=("mesh", "axes", "n_true", "max_iters",
-                                   "d"))
+                                   "d", "watchdog"))
 def _run_tol_dense_sharded(H, dang, tol, x0, *, mesh, axes, n_true,
-                           max_iters, d):
-    pr, iters, res = dist.pagerank_distributed_tol(
+                           max_iters, d, watchdog: bool = True):
+    pr, iters, res, grow = dist.pagerank_distributed_tol(
         H, mesh, tol=tol, max_iters=max_iters, d=d, row_axis=axes[0],
-        col_axis=axes[1], dangling=dang, n_true=n_true, x0=x0)
-    return pr[:n_true], iters, res
+        col_axis=axes[1], dangling=dang, n_true=n_true, x0=x0,
+        watchdog=watchdog)
+    return pr[:n_true], iters, res, grow
 
 
 @partial(jax.jit, static_argnames=("mesh", "axes", "n_true", "n_iters", "d"))
@@ -286,13 +312,13 @@ def _run_fixed_ell_sharded(data, idx, dang, *, mesh, axes, n_true, n_iters,
 
 
 @partial(jax.jit, static_argnames=("mesh", "axes", "n_true", "max_iters",
-                                   "d"))
+                                   "d", "watchdog"))
 def _run_tol_ell_sharded(data, idx, dang, tol, x0, *, mesh, axes, n_true,
-                         max_iters, d):
-    pr, iters, res = dist.pagerank_distributed_sparse_tol(
+                         max_iters, d, watchdog: bool = True):
+    pr, iters, res, grow = dist.pagerank_distributed_sparse_tol(
         data, idx, mesh, tol=tol, max_iters=max_iters, d=d, dangling=dang,
-        axes=axes, n_true=n_true, x0=x0)
-    return pr[:n_true], iters, res
+        axes=axes, n_true=n_true, x0=x0, watchdog=watchdog)
+    return pr[:n_true], iters, res, grow
 
 
 @partial(jax.jit, static_argnames=("mesh", "axes", "n_true", "n_iters", "d"))
@@ -326,29 +352,50 @@ def _run_fixed_pallas(Hp, dangp, *, n: int, n_iters: int, d: float,
 
 
 @partial(jax.jit, static_argnames=("n", "max_iters", "d", "block_n",
-                                   "block_m", "interpret"))
+                                   "block_m", "interpret", "watchdog"))
 def _run_tol_pallas(Hp, dangp, tol, x0, *, n: int, max_iters: int, d: float,
-                    block_n: int, block_m: int, interpret: bool):
+                    block_n: int, block_m: int, interpret: bool,
+                    watchdog: bool = True):
     Mp = Hp.shape[1]
     x0 = jnp.full((n,), 1.0 / n, jnp.float32) if x0 is None else x0
     xp0 = jnp.pad(x0, (0, Mp - n))[None, :]
     t0 = d * jnp.sum(xp0 * dangp) / n + (1.0 - d) / n
 
-    def cond(state):
-        _, _, i, res = state
-        return (res > tol) & (i < max_iters)
-
-    def body(state):
-        xp, t, i, _ = state
+    def fused_step(xp, t):
         yp, leak = pagerank_step_fused(Hp, xp, dangp, t, d=d,
                                        block_n=block_n, block_m=block_m,
                                        interpret=interpret)
         res = jnp.sum(jnp.abs(yp[0, :n] - xp[0, :n]))
-        return yp, d * leak / n + (1.0 - d) / n, i + 1, res
+        return yp, d * leak / n + (1.0 - d) / n, res
 
-    xp, _, iters, res = jax.lax.while_loop(
-        cond, body, (xp0, t0, jnp.int32(0), jnp.float32(jnp.inf)))
-    return xp[0, :n], iters, res
+    if not watchdog:
+        def cond(state):
+            _, _, i, res = state
+            return (res > tol) & (i < max_iters)
+
+        def body(state):
+            xp, t, i, _ = state
+            yp, t, res = fused_step(xp, t)
+            return yp, t, i + 1, res
+
+        xp, _, iters, res = jax.lax.while_loop(
+            cond, body, (xp0, t0, jnp.int32(0), jnp.float32(jnp.inf)))
+        return xp[0, :n], iters, res, jnp.int32(0)
+
+    def cond(state):
+        _, _, i, res, _, ok = state
+        return (res > tol) & (i < max_iters) & ok
+
+    def body(state):
+        xp, t, i, res, grow, _ = state
+        yp, t, new_res = fused_step(xp, t)
+        grow, ok = watchdog_update(new_res, res, grow)
+        return yp, t, i + 1, new_res, grow, ok
+
+    xp, _, iters, res, grow, _ = jax.lax.while_loop(
+        cond, body, (xp0, t0, jnp.int32(0), jnp.float32(jnp.inf),
+                     *watchdog_init()))
+    return xp[0, :n], iters, res, grow
 
 
 @partial(jax.jit, static_argnames=("n", "n_iters", "d", "block_n",
@@ -418,6 +465,10 @@ class PageRankEngine:
         self._bsr_block_size = bsr_block_size
         self._ell_k = ell_k
         self._mesh_arg = mesh
+        # resilience bookkeeping: the last run_tol's SolveInfo and the
+        # warn-once latch for silently-exhausted solves
+        self.last_solve_info = None
+        self._warned_nonconverged = False
         self._prepare_layout(src, dst)
 
     def _prepare_layout(self, src: np.ndarray, dst: np.ndarray) -> None:
@@ -553,38 +604,83 @@ class PageRankEngine:
                           n_iters=n_iters)
 
     def run_tol(self, tol: float = 1e-6, max_iters: int = 1000,
-                x0: np.ndarray | jax.Array | None = None):
+                x0: np.ndarray | jax.Array | None = None, *,
+                watchdog: bool = True, raise_on_fail: bool = False):
         """Tolerance-terminated power iteration; one compiled dispatch.
-        Returns ``(pr, n_iters, residual)``.
+        Returns a :class:`~repro.pagerank.resilience.SolveResult` — still
+        the classic ``(pr, n_iters, residual)`` 3-tuple, now carrying the
+        full :class:`~repro.pagerank.resilience.SolveInfo` as ``.info``
+        (also recorded as ``self.last_solve_info``).
 
         ``x0`` warm-starts the loop from a previous rank vector (shape
         ``(n,)``); ``None`` keeps the classic uniform cold start.  After a
         small graph change the previous ranks are an excellent initial
         state, so the dynamic-graph refresh path converges in a fraction
-        of the cold iteration count."""
+        of the cold iteration count.
+
+        ``watchdog`` (default on) arms the in-loop convergence watchdog:
+        NaN/Inf residuals and sustained residual growth abort the loop
+        early instead of spinning to ``max_iters``, at two scalar ops per
+        iteration inside the existing ``while_loop``.  A solve that did
+        not converge used to return an unconverged vector
+        indistinguishable from a converged one; now it warns once per
+        engine — or raises
+        :class:`~repro.pagerank.resilience.ConvergenceError` with
+        ``raise_on_fail=True``."""
         x0 = None if x0 is None else jnp.asarray(x0, jnp.float32)
         if self.backend == "dense_sharded":
-            return _run_tol_dense_sharded(
+            out = _run_tol_dense_sharded(
                 self._operands[0], self._dang, jnp.float32(tol),
                 self._pad_x0(x0), mesh=self.mesh, axes=self._axes,
-                n_true=self.n, max_iters=max_iters, d=self.d)
-        if self.backend == "ell_sharded":
-            return _run_tol_ell_sharded(
+                n_true=self.n, max_iters=max_iters, d=self.d,
+                watchdog=watchdog)
+        elif self.backend == "ell_sharded":
+            out = _run_tol_ell_sharded(
                 *self._operands, self._dang, jnp.float32(tol),
                 self._pad_x0(x0), mesh=self.mesh, axes=self._axes,
-                n_true=self.n, max_iters=max_iters, d=self.d)
-        if self.backend == "pallas_dense":
+                n_true=self.n, max_iters=max_iters, d=self.d,
+                watchdog=watchdog)
+        elif self.backend == "pallas_dense":
             Hp, dangp = self._operands
-            return _run_tol_pallas(
+            out = _run_tol_pallas(
                 Hp, dangp, jnp.float32(tol), x0, n=self.n,
                 max_iters=max_iters, d=self.d, block_n=self._block[0],
-                block_m=self._block[1], interpret=self.interpret)
-        if self.backend == "dense":
-            return pagerank_dense(self._operands[0], d=self.d, tol=tol,
-                                  max_iters=max_iters, x0=x0)
-        return _run_tol(self._operands, self._dang, self.d,
-                        jnp.float32(tol), x0, backend=self._mv_backend,
-                        n=self.n, max_iters=max_iters)
+                block_m=self._block[1], interpret=self.interpret,
+                watchdog=watchdog)
+        elif self.backend == "dense":
+            out = pagerank_dense(self._operands[0], d=self.d, tol=tol,
+                                 max_iters=max_iters, x0=x0,
+                                 watchdog=watchdog)
+        else:
+            out = _run_tol(self._operands, self._dang, self.d,
+                           jnp.float32(tol), x0, backend=self._mv_backend,
+                           n=self.n, max_iters=max_iters, watchdog=watchdog)
+        return self._finish_solve(out, tol, max_iters, raise_on_fail)
+
+    def _finish_solve(self, out, tol: float, max_iters: int,
+                      raise_on_fail: bool) -> SolveResult:
+        """Host-side epilogue of every tolerance solve: build the
+        :class:`SolveInfo` from the loop's exit scalars, record it, and
+        apply the raise/warn-once policy for non-converged solves."""
+        pr, iters, res, grow = out
+        info = make_solve_info(iters, res, grow, tol=tol,
+                               max_iters=max_iters)
+        self.last_solve_info = info
+        if not info.converged:
+            if raise_on_fail:
+                raise ConvergenceError(info)
+            if not self._warned_nonconverged:
+                self._warned_nonconverged = True
+                reason = ("nonfinite residual" if info.nonfinite else
+                          "diverging residual" if info.diverged else
+                          f"max_iters={max_iters} exhausted")
+                warnings.warn(
+                    f"run_tol did not converge ({reason}; iters="
+                    f"{info.iters}, residual={info.residual:.3e}, tol="
+                    f"{tol:.1e}); check run_tol(...).info — further "
+                    f"non-converged solves on this engine stay silent",
+                    RuntimeWarning, stacklevel=3)
+        return SolveResult(pr, iters, res, info)
 
     def _pad_x0(self, x0: jax.Array | None) -> jax.Array | None:
         """Zero-pad a warm-start vector up to the sharded tiers' padded N

@@ -1,5 +1,6 @@
 from repro.serve.engine import (PageRankQueryEngine, PPRQuery, Request,
-                                ServeEngine, batched_decode_fn)
+                                ServeEngine, ServeResilience,
+                                batched_decode_fn)
 
 __all__ = ["Request", "ServeEngine", "batched_decode_fn",
-           "PageRankQueryEngine", "PPRQuery"]
+           "PageRankQueryEngine", "PPRQuery", "ServeResilience"]

@@ -18,8 +18,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.graph.validate import (DeadLetterQueue, ValidationPolicy,
+                                  validate_delta)
 from repro.models import model as M
 from repro.pagerank.engine import PageRankEngine
+from repro.pagerank.resilience import (RankStore, ResilientRefresher,
+                                       RetryPolicy, ppr_healthy)
 from repro.pagerank.sparse import top_k_proteins
 
 
@@ -139,12 +143,38 @@ def batched_decode_fn(cfg: ModelConfig) -> Callable:
     return step
 
 
+@dataclasses.dataclass(frozen=True)
+class ServeResilience:
+    """Resilience knobs for :class:`PageRankQueryEngine` — pass an instance
+    (or just ``ServeResilience()``) to turn the serving path from
+    raise-on-anything into validate / quarantine / degrade-gracefully.
+
+    ``validation`` screens every pushed delta
+    (:func:`repro.graph.validate.validate_delta`); ``retry`` bounds the
+    exponential-backoff update retries; ``snapshots`` is the last-known-
+    good ring size; ``healthy_atol`` the sum-to-1 tolerance of the serve
+    health checks; ``dead_letter_maxlen`` the quarantine audit window."""
+
+    validation: ValidationPolicy = ValidationPolicy()
+    retry: RetryPolicy = RetryPolicy()
+    snapshots: int = 4
+    healthy_atol: float = 1e-3
+    dead_letter_maxlen: int = 256
+
+
 @dataclasses.dataclass
 class PPRQuery:
     uid: int
     seeds: np.ndarray             # int indices of the user's seed proteins
     top_k: int = 10
     result: tuple | None = None   # (indices, scores) once served
+    # resilience tags, stamped at serve time (resilient mode only):
+    # "fresh"    — ranks include every accepted delta
+    # "stale"    — last refresh failed; ranks predate the pending deltas
+    # "degraded" — personalized serve unhealthy; global last-known-good
+    #              ranks substituted
+    status: str = "unserved"
+    graph_version: int = -1       # RankStore version the result was built on
 
 
 class PageRankQueryEngine:
@@ -164,10 +194,25 @@ class PageRankQueryEngine:
     always refreshes first, so every served batch — including queries that
     were already in flight when the delta arrived — sees ranks no staler
     than one refresh interval.
+
+    **Resilient mode** — pass ``resilience=ServeResilience()`` and the
+    live path stops trusting its inputs and its own solves: pushed deltas
+    are screened by :func:`repro.graph.validate.validate_delta` (bad edges
+    quarantined into :attr:`dead_letters` instead of raising), refreshes
+    run through the :class:`~repro.pagerank.resilience.ResilientRefresher`
+    escalation ladder (retry → rebuild → restore last-known-good snapshot)
+    and never raise, and every served batch is health-checked — an
+    unhealthy PPR triggers one recovery + re-serve, then falls back to the
+    last good *global* ranks.  Every query is stamped with ``status``
+    (``"fresh"`` / ``"stale"`` / ``"degraded"``) and the graph version it
+    was answered from, so callers can tell exactly what they got.  With
+    ``resilience=None`` (default) behavior is the legacy raise-on-error
+    path, unchanged.
     """
 
     def __init__(self, engine: PageRankEngine, n_iters: int = 100,
-                 max_batch: int = 8, refresh_tol: float = 1e-6):
+                 max_batch: int = 8, refresh_tol: float = 1e-6,
+                 resilience: ServeResilience | None = None):
         self.engine = engine
         self.n_iters = n_iters
         self.max_batch = max_batch
@@ -176,6 +221,27 @@ class PageRankQueryEngine:
         self._pending_deltas: list = []
         self.n_refreshes = 0
         self.last_update_info = None
+        self.resilience = resilience
+        self.last_refresh_outcome = None
+        self._stale = False
+        if resilience is not None:
+            self.dead_letters = DeadLetterQueue(
+                maxlen=resilience.dead_letter_maxlen)
+            self.refresher = ResilientRefresher(
+                store=RankStore(maxlen=resilience.snapshots),
+                retry=resilience.retry,
+                healthy_atol=resilience.healthy_atol)
+            self._ensure_baseline()
+
+    # ----------------------- resilience plumbing ----------------------- #
+    def _recoverable(self) -> bool:
+        return hasattr(self.engine, "rebuild_and_solve")
+
+    def _ensure_baseline(self) -> None:
+        """Record the engine's current state as the first restore target
+        (no-op until the engine has healthy solved ranks)."""
+        if (self._recoverable() and len(self.refresher.store) == 0):
+            self.refresher.baseline(self.engine)
 
     def submit(self, uid: int, seeds, top_k: int = 10) -> PPRQuery:
         """Queue one user's query; flushed automatically at ``max_batch``.
@@ -192,56 +258,145 @@ class PageRankQueryEngine:
             self.flush()
         return q
 
-    def push_update(self, delta) -> None:
+    def push_update(self, delta):
         """Queue a streamed :class:`~repro.graph.delta.GraphDelta`; it is
         folded into the graph at the next :meth:`refresh`/:meth:`flush`,
         before any queued query is served.  Like ``submit`` for seed sets,
-        a malformed delta (out-of-range node ids) is rejected HERE, before
-        it can poison the pending batch."""
+        a malformed delta (out-of-range node ids) is handled HERE, before
+        it can poison the pending batch: the legacy path raises; in
+        resilient mode the delta runs through
+        :func:`~repro.graph.validate.validate_delta` — invalid edges land
+        in :attr:`dead_letters` with structured reasons, the clean
+        remainder is queued, and the
+        :class:`~repro.graph.validate.ValidationResult` is returned (a
+        ``"reject"`` validation policy still raises
+        :class:`~repro.graph.validate.DeltaRejected`)."""
         if not hasattr(self.engine, "update"):
             raise TypeError(
                 "push_update needs a DynamicPageRankEngine; "
                 f"got a static {type(self.engine).__name__}")
-        self._pending_deltas.append(
-            delta.canonical(self.engine.n, symmetric=self.engine.symmetric))
+        if self.resilience is None:
+            self._pending_deltas.append(delta.canonical(
+                self.engine.n, symmetric=self.engine.symmetric))
+            return None
+        result = validate_delta(delta, self.engine.n,
+                                self.resilience.validation)
+        self.dead_letters.extend(result.dead_letters)
+        if result.delta is not None:
+            self._pending_deltas.append(result.delta.canonical(
+                self.engine.n, symmetric=self.engine.symmetric))
+        return result
 
     def refresh(self) -> list:
         """Apply every pending delta to the live engine now — coalesced
         into ONE update (``graph.delta.compose`` keeps the in-order
         semantics), so a backlog of k stream ticks costs one solve, not k.
-        Returns the :class:`~repro.pagerank.dynamic.UpdateInfo` records
-        (one entry when anything was pending).  If the update itself
-        fails, the deltas are re-queued so no accepted change is lost."""
+
+        Legacy mode returns the
+        :class:`~repro.pagerank.dynamic.UpdateInfo` records (one entry
+        when anything was pending) and re-queues the deltas on an
+        exception, which propagates.  Resilient mode never raises: the
+        update runs through the
+        :class:`~repro.pagerank.resilience.ResilientRefresher` escalation
+        ladder and the
+        :class:`~repro.pagerank.resilience.RefreshOutcome` is returned
+        (and kept as :attr:`last_refresh_outcome`); if the delta could not
+        be applied it is re-queued and subsequent serves are tagged
+        ``"stale"`` until a refresh succeeds."""
         from repro.graph.delta import compose
         deltas, self._pending_deltas = self._pending_deltas, []
         if not deltas:
             return []
         merged = deltas[0] if len(deltas) == 1 else compose(
             deltas, self.engine.n, symmetric=self.engine.symmetric)
-        try:
-            _, info = self.engine.update(merged, tol=self.refresh_tol)
-        except Exception:
+        if self.resilience is None:
+            try:
+                _, info = self.engine.update(merged, tol=self.refresh_tol)
+            except Exception:
+                self._pending_deltas = deltas + self._pending_deltas
+                raise
+            self.n_refreshes += 1
+            self.last_update_info = info
+            return [info]
+        self._ensure_baseline()
+        outcome = self.refresher.refresh(self.engine, merged,
+                                         tol=self.refresh_tol)
+        self.last_refresh_outcome = outcome
+        self._stale = not outcome.delta_applied
+        if outcome.delta_applied:
+            self.n_refreshes += 1
+            self.last_update_info = outcome.update_info
+        else:
+            # the graph never took the delta (every retry raised, or the
+            # engine was rolled back to the snapshot) — re-queue it ahead
+            # of anything pushed meanwhile, so order is preserved
             self._pending_deltas = deltas + self._pending_deltas
-            raise
-        self.n_refreshes += 1
-        self.last_update_info = info
-        return [info]
+        return [outcome]
 
     def flush(self) -> list[PPRQuery]:
         """Serve every queued query with one batched device dispatch —
         after folding in any pending graph deltas, so in-flight queries
-        never see ranks staler than one refresh interval."""
+        never see ranks staler than one refresh interval.
+
+        Resilient mode additionally health-checks the batched PPR matrix
+        (finite, non-negative, every column sum-to-1).  An unhealthy or
+        raising serve triggers ONE engine recovery (rebuild from host
+        bookkeeping, else restore the last-known-good snapshot) and a
+        re-serve; if that also fails, queries are answered from the last
+        good *global* rank vector — finite, sum-to-1, tagged
+        ``"degraded"`` — and the call never raises."""
         if self._pending_deltas:
             self.refresh()
         batch, self._queue = self._queue, []
         if not batch:
             return []
-        PPR = self.engine.ppr([q.seeds for q in batch],
-                              n_iters=self.n_iters)        # (N, Q)
-        for j, q in enumerate(batch):
-            idx, scores = top_k_proteins(PPR[:, j], k=q.top_k)
+        if self.resilience is None:
+            PPR = self.engine.ppr([q.seeds for q in batch],
+                                  n_iters=self.n_iters)    # (N, Q)
+            for j, q in enumerate(batch):
+                idx, scores = top_k_proteins(PPR[:, j], k=q.top_k)
+                q.result = (np.asarray(idx), np.asarray(scores))
+            return batch
+        PPR = self._serve_ppr(batch)
+        if PPR is None and self._recoverable():
+            # one recovery attempt, then one re-serve — bounded work per
+            # flush, no retry storm
+            self.refresher.recover(self.engine, tol=self.refresh_tol)
+            PPR = self._serve_ppr(batch)
+        version = self.refresher.store.version
+        if PPR is not None:
+            status = "stale" if self._stale else "fresh"
+            for j, q in enumerate(batch):
+                idx, scores = top_k_proteins(PPR[:, j], k=q.top_k)
+                q.result = (np.asarray(idx), np.asarray(scores))
+                q.status = status
+                q.graph_version = version
+            return batch
+        # degraded: answer from the last-known-good global ranks (or the
+        # uniform distribution if no snapshot exists yet) — finite and
+        # sum-to-1 by construction, explicitly tagged
+        snap = self.refresher.store.latest()
+        if snap is not None and snap.ranks is not None:
+            ranks = np.asarray(snap.ranks, np.float32)
+        else:
+            ranks = np.full(self.engine.n, 1.0 / self.engine.n, np.float32)
+        for q in batch:
+            idx, scores = top_k_proteins(ranks, k=q.top_k)
             q.result = (np.asarray(idx), np.asarray(scores))
+            q.status = "degraded"
+            q.graph_version = version
         return batch
+
+    def _serve_ppr(self, batch) -> np.ndarray | None:
+        """One batched PPR dispatch, health-checked: the (N, Q) matrix, or
+        ``None`` if the dispatch raised or produced a poisoned batch."""
+        try:
+            PPR = np.asarray(self.engine.ppr([q.seeds for q in batch],
+                                             n_iters=self.n_iters))
+        except Exception:       # noqa: BLE001 — degradation contract
+            return None
+        atol = self.resilience.healthy_atol
+        return PPR if ppr_healthy(PPR, atol=atol) else None
 
     def query_batch(self, seed_sets, top_k: int = 10) -> list[tuple]:
         """One-shot convenience: serve ``seed_sets`` now, return per-user

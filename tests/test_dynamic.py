@@ -57,13 +57,32 @@ def net():
 # GraphDelta / apply_delta / EdgeStream                                       #
 # --------------------------------------------------------------------------- #
 def test_graphdelta_canonicalizes():
-    d = GraphDelta.inserts([1, 1, 2, 3], [2, 2, 1, 3]).canonical(10)
+    d = GraphDelta.inserts([1, 1, 2], [2, 2, 1]).canonical(10)
     got = set(zip(d.insert_src.tolist(), d.insert_dst.tolist()))
-    # duplicates collapse, self-loop dropped, both directions present
+    # duplicates collapse, both directions present
     assert got == {(1, 2), (2, 1)}
     assert d.n_delete == 0
     with pytest.raises(ValueError):
         GraphDelta.inserts([0], [10]).canonical(10)
+
+
+def test_graphdelta_rejects_malformed_at_construction():
+    """Self-loops, negative ids, NaN payloads, and length mismatches used
+    to sail through construction and blow up (or not) deep inside layout
+    patching — now they fail fast with a clear error."""
+    with pytest.raises(ValueError, match="self-loop"):
+        GraphDelta.inserts([3], [3])
+    with pytest.raises(ValueError, match="negative"):
+        GraphDelta.inserts([-1], [2])
+    with pytest.raises(ValueError, match="non-finite"):
+        GraphDelta.inserts([np.nan], [2.0])
+    with pytest.raises(ValueError, match="non-integral"):
+        GraphDelta.inserts([1.5], [2.0])
+    with pytest.raises(ValueError, match="mismatch"):
+        GraphDelta.inserts([1, 2], [3])
+    # integral floats are accepted and normalized to int32
+    d = GraphDelta.inserts([1.0], [2.0])
+    assert d.insert_src.dtype == np.int32
 
 
 def test_graphdelta_directed_keeps_orientation():
@@ -182,9 +201,10 @@ def test_update_properties_random_deltas(backend, seed, dseed):
     if len(src) < 8:
         return
     rng = np.random.default_rng(dseed)
-    ins = rng.integers(0, n, size=(3, 2))
+    iu = rng.integers(0, n, size=3)
+    iv = (iu + rng.integers(1, n, size=3)) % n        # guaranteed u != v
     k = rng.integers(0, len(src), size=2)
-    delta = GraphDelta(ins[:, 0], ins[:, 1], src[k], dst[k])
+    delta = GraphDelta(iu, iv, src[k], dst[k])
     dyn = DynamicPageRankEngine(src, dst, n, backend=backend)
     dyn.run_tol(1e-7, max_iters=500)
     pr, info = dyn.update(delta)
@@ -225,11 +245,12 @@ def test_auto_policy_picks_by_delta_size(net):
     assert info.strategy == "push"
     # delta above rebuild_frac of the edge set: rebuild
     rng = np.random.default_rng(0)
-    big = rng.integers(0, n, size=(dyn.n_edges // 4, 2))
-    _, info = dyn.update(GraphDelta.inserts(big[:, 0], big[:, 1]))
+    bu = rng.integers(0, n, size=dyn.n_edges // 4)
+    bv = (bu + rng.integers(1, n, size=bu.size)) % n  # guaranteed u != v
+    _, info = dyn.update(GraphDelta.inserts(bu, bv))
     assert info.strategy == "rebuild"
     # noop delta
-    pr, info = dyn.update(GraphDelta.inserts(big[:1, 0], big[:1, 1]))
+    pr, info = dyn.update(GraphDelta.inserts(bu[:1], bv[:1]))
     assert info.strategy == "noop" and pr is dyn.ranks
 
 

@@ -102,3 +102,38 @@ def test_ppr_columns_are_distributions(backend, seed, seeds_a, seeds_b):
     assert PPR.shape == (n, 2)
     assert (PPR >= 0).all()
     np.testing.assert_allclose(PPR.sum(axis=0), 1.0, atol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
+# degenerate graphs: every backend must produce a finite distribution even    #
+# when the edge list gives the layout builders nothing to chew on             #
+# --------------------------------------------------------------------------- #
+_E = np.array([], np.int32)
+DEGENERATE = {
+    # no edges at all: every node dangles, PR is exactly uniform
+    "empty": (4, _E, _E),
+    # a single node with no edges (N smaller than any block/shard tile)
+    "single_node": (1, _E, _E),
+    # every edge lands on a sink: half the nodes dangle
+    "all_dangling": (6, np.array([0, 1, 2], np.int32),
+                     np.array([3, 4, 5], np.int32)),
+    # one 2-cycle plus six isolated nodes (zero rows AND zero columns)
+    "isolated_components": (8, np.array([0, 1], np.int32),
+                            np.array([1, 0], np.int32)),
+}
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+@pytest.mark.parametrize("case", sorted(DEGENERATE))
+def test_degenerate_graphs_stay_distributions(backend, case):
+    n, src, dst = DEGENERATE[case]
+    eng = PageRankEngine(src, dst, n, backend=backend)
+    res = eng.run_tol(tol=1e-6, max_iters=200)
+    pr = np.asarray(res[0])
+    assert pr.shape == (n,)
+    assert np.isfinite(pr).all() and (pr >= -1e-6).all()
+    assert pr.sum() == pytest.approx(1.0, abs=1e-3)
+    assert not res.info.failed          # watchdog sees a clean solve
+    if case in ("empty", "single_node"):
+        # no edges: teleport + dangling redistribution is exactly uniform
+        np.testing.assert_allclose(pr, 1.0 / n, atol=1e-5)
