@@ -1,0 +1,226 @@
+"""Observability-layer cost: trace-ring and registry overhead, plus the
+JSONL -> report exact-reproduction check.
+
+Three measurements:
+
+* **Instrumented solve** — the residual-trajectory ring adds one scalar
+  dynamic-update-slice per iteration inside the compiled ``while_loop``.
+  Measured by pinning the iteration count (``tol=0.0`` never converges)
+  and comparing ``trace=True`` against ``trace=False``; the acceptance
+  bar is <= 3% at the paper-scale N=5000.
+* **Instrumented serve** — a full metrics registry (spans + counters +
+  histograms + events) against a :class:`~repro.obs.registry.NullRegistry`
+  engine+server pair on the same streaming serve workload; bar <= 3%.
+
+Overheads are computed as the **median of per-pair ratios over
+interleaved off/on calls** (off, on, off, on, ...): this shared-CPU
+box shows 2-8x wall-clock jitter between identical calls, so two
+independently-timed medians measure scheduler drift, not the
+instrument — pairing adjacent calls cancels the drift and the median
+rejects the outlier pairs.
+* **Report round-trip** — a seeded streaming-serve run (fresh AND stale
+  batches plus dead-lettered edges, forced deterministically with the
+  fault injector) writes a JSONL event log and a registry dump;
+  ``scripts/obs_report.py``'s derivation must reproduce the query-status
+  counts, refresh-ladder outcomes, and p50/p95 serve latency **exactly**
+  from the log alone.
+
+Results merge into ``BENCH_pagerank_engine.json`` as the
+``observability`` block (other blocks preserved).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+import time
+import warnings
+
+import numpy as np
+
+from repro.graph import generators as gen
+from repro.graph.delta import GraphDelta
+from repro.obs.registry import MetricsRegistry, NullRegistry
+from repro.pagerank import DynamicPageRankEngine
+from repro.pagerank.resilience import FaultInjector, RetryPolicy
+from repro.serve.engine import PageRankQueryEngine, ServeResilience
+
+OUT_PATH = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_pagerank_engine.json")
+SCRIPTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "scripts")
+
+
+def _paired_overhead(f_off, f_on, reps: int) -> tuple[float, float, float]:
+    """Interleave ``reps`` (off, on) call pairs; return
+    ``(overhead_pct, min_off_ms, min_on_ms)`` where the overhead is the
+    median of per-pair on/off ratios (drift-cancelling, outlier-robust)."""
+    f_off(), f_on()                                         # compile/warm
+    pairs = [(f_off(), f_on()) for _ in range(reps)]
+    ratios = sorted(on / off for off, on in pairs)
+    return ((ratios[len(ratios) // 2] - 1.0) * 100.0,
+            min(off for off, _ in pairs), min(on for _, on in pairs))
+
+
+def _solve_ms(eng, iters: int, trace: bool) -> float:
+    """One timed fixed-iteration solve (tol=0.0 never converges, so both
+    variants run exactly ``iters`` loop bodies)."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        t0 = time.perf_counter()
+        eng.run_tol(tol=0.0, max_iters=iters,
+                    trace=trace)[0].block_until_ready()
+        return (time.perf_counter() - t0) * 1e3
+
+
+def _serve_workload(server, n: int, rng, n_batches: int = 4,
+                    batch: int = 4) -> None:
+    """One deterministic streaming-serve round: push a small delta, then
+    serve ``n_batches`` query batches."""
+    server.push_update(GraphDelta.inserts(
+        rng.integers(0, n, 4), rng.integers(0, n, 4)))
+    for _ in range(n_batches):
+        for uid in range(batch):
+            server.submit(uid, rng.integers(0, n, 3))
+        server.flush()
+
+
+def _make_server(eng_metrics, n: int, n_iters: int, src, dst):
+    """Engine+server pair wired to ``eng_metrics`` (NullRegistry ==
+    uninstrumented), shapes pre-warmed."""
+    eng = DynamicPageRankEngine(src, dst, n, backend="ell",
+                                metrics=eng_metrics)
+    eng.run_tol(1e-6)
+    server = PageRankQueryEngine(eng, n_iters=n_iters,
+                                 max_batch=10_000,
+                                 resilience=ServeResilience(),
+                                 metrics=eng_metrics)
+    _serve_workload(server, n, np.random.default_rng(7))    # warm shapes
+    return server
+
+
+def _serve_ms(server, n: int) -> float:
+    """One timed streaming-serve round (fixed rng seed -> same ops)."""
+    rng = np.random.default_rng(7)
+    t0 = time.perf_counter()
+    _serve_workload(server, n, rng)
+    return (time.perf_counter() - t0) * 1e3
+
+
+def _roundtrip(n: int, n_iters: int, src, dst) -> dict:
+    """Seeded streaming serve producing fresh + stale batches and dead
+    letters, then the obs_report derivation cross-checked for an exact
+    match against the registry dump."""
+    sys.path.insert(0, SCRIPTS)
+    import obs_report
+
+    tmp = tempfile.mkdtemp(prefix="obs_bench_")
+    jsonl = os.path.join(tmp, "events.jsonl")
+    mpath = os.path.join(tmp, "metrics.json")
+    reg = MetricsRegistry(jsonl_path=jsonl)
+    eng = DynamicPageRankEngine(src, dst, n, backend="ell", metrics=reg)
+    eng.run_tol(1e-6)
+    faults = FaultInjector(seed=0)
+    server = PageRankQueryEngine(
+        eng, n_iters=n_iters, max_batch=10_000,
+        resilience=ServeResilience(retry=RetryPolicy(max_retries=2)),
+        metrics=reg)
+    rng = np.random.default_rng(11)
+    # fresh batches
+    _serve_workload(server, n, rng, n_batches=3)
+    # a malformed delta -> dead letters (node ids out of range)
+    server.push_update(GraphDelta.inserts([0, n + 5], [n + 9, 1]))
+    # exceed the retry budget -> "failed" refresh -> stale serves
+    faults.fail_next_updates(eng, times=3)
+    server.push_update(GraphDelta.inserts(
+        rng.integers(0, n, 2), rng.integers(0, n, 2)))
+    for uid in range(4):
+        server.submit(uid, rng.integers(0, n, 3))
+    server.flush()
+    # fault cleared -> recovery refresh -> fresh again
+    for uid in range(4):
+        server.submit(uid, rng.integers(0, n, 3))
+    server.flush()
+    reg.dump_json(mpath)
+    reg.close()
+
+    events = obs_report.load_events(jsonl)
+    derived = obs_report.derive(events)
+    errors = obs_report.cross_check(derived, json.loads(
+        open(mpath).read()))
+    got = derived["batch_ms"].summary()
+    return {
+        "events": len(events),
+        "queries_by_status": derived["queries"],
+        "refresh_outcomes": derived["refreshes"],
+        "dead_letter_edges": derived["dead_letters"],
+        "serve_p50_ms": got.get("p50"),
+        "serve_p95_ms": got.get("p95"),
+        "exact": not errors,
+        "mismatches": errors,
+        "saw_fresh_and_stale": (derived["queries"].get("fresh", 0) > 0
+                                and derived["queries"].get("stale", 0) > 0),
+    }
+
+
+def run(n: int = 5000, iters: int = 100, reps: int = 25,
+        out_path: str | None = OUT_PATH) -> dict:
+    src, dst = gen.barabasi_albert(n, m_edges=4, seed=0)
+
+    eng = DynamicPageRankEngine(src, dst, n, backend="ell",
+                                metrics=NullRegistry())
+    solve_overhead_pct, t_off, t_on = _paired_overhead(
+        lambda: _solve_ms(eng, iters, trace=False),
+        lambda: _solve_ms(eng, iters, trace=True), reps)
+
+    serve_iters = max(iters // 4, 5)
+    s_null = _make_server(NullRegistry(), n, serve_iters, src, dst)
+    s_full = _make_server(MetricsRegistry(), n, serve_iters, src, dst)
+    serve_overhead_pct, t_null, t_full = _paired_overhead(
+        lambda: _serve_ms(s_null, n),
+        lambda: _serve_ms(s_full, n), reps)
+
+    rt = _roundtrip(n, serve_iters, src, dst)
+
+    block = {
+        "n": n,
+        "iters_fixed": iters,
+        "interleaved_pairs": reps,
+        "overhead_estimator": "median of per-pair on/off ratios",
+        "backend": "ell",
+        "solve_ms_trace_off": t_off,
+        "solve_ms_trace_on": t_on,
+        "trace_overhead_pct": solve_overhead_pct,
+        "serve_ms_null_registry": t_null,
+        "serve_ms_full_registry": t_full,
+        "serve_overhead_pct": serve_overhead_pct,
+        "roundtrip": rt,
+        "claim": {
+            "solve_overhead_le_3pct": solve_overhead_pct <= 3.0,
+            "serve_overhead_le_3pct": serve_overhead_pct <= 3.0,
+            "report_roundtrip_exact": bool(rt["exact"]
+                                           and rt["saw_fresh_and_stale"]
+                                           and rt["dead_letter_edges"] > 0),
+        },
+    }
+
+    if out_path:
+        report = {}
+        if os.path.exists(out_path):
+            with open(out_path) as f:
+                report = json.load(f)
+        report["observability"] = block
+        with open(out_path, "w") as f:
+            json.dump(report, f, indent=2)
+
+    return {"name": "observability",
+            "us_per_call": t_on * 1e3,
+            "derived": (f"trace_overhead={solve_overhead_pct:.2f}%;"
+                        f"serve_overhead={serve_overhead_pct:.2f}%;"
+                        f"roundtrip={'exact' if rt['exact'] else 'MISMATCH'};"
+                        f"json={'written' if out_path else 'skipped'}")}
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=2))

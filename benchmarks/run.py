@@ -19,8 +19,9 @@ import sys
 def main() -> None:
     from benchmarks import (dynamic_bench, fig5_routing,
                             fig6a_matvec_latency, fig6b_pagerank_throughput,
-                            kernel_bench, pagerank_engine_bench,
-                            resilience_bench, roofline, table1_design)
+                            kernel_bench, observability_bench,
+                            pagerank_engine_bench, resilience_bench,
+                            roofline, table1_design)
 
     smoke = "--smoke" in sys.argv
     quick = "--quick" in sys.argv or smoke
@@ -29,6 +30,7 @@ def main() -> None:
         engine_kw = dict(n=256, iters=3, reps=1, out_path=None)
         dynamic_kw = dict(n=256, reps=1, out_path=None)
         resilience_kw = dict(n=256, iters=10, reps=3, out_path=None)
+        obs_kw = dict(n=256, iters=10, reps=3, out_path=None)
     elif quick:
         sizes, iters = [1000, 2000], 20
         # out_path=None: never overwrite the full-size JSON artifact with
@@ -36,11 +38,13 @@ def main() -> None:
         engine_kw = dict(n=1024, iters=20, out_path=None)
         dynamic_kw = dict(n=1024, reps=3, out_path=None)
         resilience_kw = dict(n=1024, iters=50, reps=3, out_path=None)
+        obs_kw = dict(n=1024, iters=50, reps=3, out_path=None)
     else:
         sizes, iters = None, 100
         engine_kw = dict()
         dynamic_kw = dict()
         resilience_kw = dict()
+        obs_kw = dict()
 
     benches = [
         fig5_routing.run,
@@ -51,6 +55,7 @@ def main() -> None:
         (lambda: pagerank_engine_bench.run(**engine_kw)),
         (lambda: dynamic_bench.run(**dynamic_kw)),
         (lambda: resilience_bench.run(**resilience_kw)),
+        (lambda: observability_bench.run(**obs_kw)),
         roofline.run,
     ]
     print("name,us_per_call,derived")

@@ -9,6 +9,8 @@ keeps serving batched personalized-PageRank queries whose results are
 never staler than one refresh interval.
 
 Run:  PYTHONPATH=src python examples/streaming_pagerank.py [--nodes N]
+      add ``--jsonl events.jsonl --metrics-out metrics.json`` to record
+      the run's observability stream (inspect with scripts/obs_report.py)
 """
 from __future__ import annotations
 
@@ -18,6 +20,7 @@ import time
 import numpy as np
 
 from repro.graph.delta import EdgeStream, apply_delta
+from repro.obs.registry import MetricsRegistry
 from repro.pagerank import DynamicPageRankEngine, PageRankEngine
 from repro.serve import PageRankQueryEngine
 
@@ -26,18 +29,25 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--nodes", type=int, default=2000)
     ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--jsonl", default=None,
+                    help="append the live observability event log here")
+    ap.add_argument("--metrics-out", default=None,
+                    help="dump the final registry as_dict JSON here")
     args = ap.parse_args(argv)
     n = args.nodes
 
+    metrics = MetricsRegistry(jsonl_path=args.jsonl)
     stream = EdgeStream(n, m_edges=4, seed=0, insert_per_step=6,
                         delete_per_step=4)
     src, dst = stream.base()
-    engine = DynamicPageRankEngine(src, dst, n, backend="ell")
+    engine = DynamicPageRankEngine(src, dst, n, backend="ell",
+                                   metrics=metrics)
     pr, iters, _ = engine.run_tol(1e-7)
     print(f"base graph: n={n}, edges={engine.n_edges}, "
           f"layout={engine.layout}, cold solve {int(iters)} iters")
 
-    serve = PageRankQueryEngine(engine, n_iters=60, max_batch=4)
+    serve = PageRankQueryEngine(engine, n_iters=60, max_batch=4,
+                                metrics=metrics)
     rng = np.random.default_rng(0)
     cur = (src, dst)
     for step, delta in zip(range(args.steps), stream):
@@ -46,16 +56,18 @@ def main(argv=None) -> None:
                                 seeds=rng.choice(n, size=3, replace=False),
                                 top_k=5)
                    for q in range(3)]
-        t0 = time.time()
+        t0 = time.perf_counter()
         serve.flush()                     # refresh graph, then serve batch
-        dt = (time.time() - t0) * 1e3
+        dt = (time.perf_counter() - t0) * 1e3
         info = serve.last_update_info
         cur = apply_delta(cur[0], cur[1], delta, n)
         top = queries[0].result[0][:3]
+        lag = metrics.gauge("serve.freshness_lag_s").value or 0.0
         print(f"t={delta.timestamp:4.1f}  +{delta.n_insert // 2}/"
               f"-{delta.n_delete // 2} edges  refresh={info.strategy:7s} "
               f"({info.iters:3d} sweeps, residual {info.residual:.1e})  "
-              f"flush {dt:6.1f} ms  top proteins uid{queries[0].uid}: {top}")
+              f"flush {dt:6.1f} ms  lag {lag:5.3f} s  "
+              f"top proteins uid{queries[0].uid}: {top}")
 
     # the whole stream, cross-checked against a from-scratch engine
     scratch = PageRankEngine(cur[0], cur[1], n, backend="ell")
@@ -63,6 +75,14 @@ def main(argv=None) -> None:
     l1 = float(np.abs(np.asarray(engine.ranks) - np.asarray(ref)).sum())
     print(f"after {args.steps} deltas: L1(incremental, from-scratch) = "
           f"{l1:.2e}  (refreshes={serve.n_refreshes})")
+    h = metrics.histogram("serve.batch_ms").summary()
+    if h["count"]:
+        print(f"serve latency: n={h['count']}  p50={h['p50']:.1f} ms  "
+              f"p95={h['p95']:.1f} ms")
+    if args.metrics_out:
+        metrics.dump_json(args.metrics_out)
+        print(f"registry dump -> {args.metrics_out}")
+    metrics.close()
 
 
 if __name__ == "__main__":

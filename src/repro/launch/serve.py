@@ -14,6 +14,7 @@ import numpy as np
 
 from repro.configs import get_config, get_smoke_config
 from repro.models import model as M
+from repro.obs.registry import default_registry
 from repro.serve import Request, ServeEngine
 
 
@@ -39,9 +40,12 @@ def run(argv=None):
                     max_new_tokens=args.max_new,
                     temperature=args.temperature)
             for i in range(args.requests)]
-    t0 = time.time()
+    # perf_counter, not time.time(): wall-clock adjustments (NTP slew)
+    # corrupt an interval measurement; perf_counter is monotonic
+    t0 = time.perf_counter()
     engine.serve(reqs, n_slots=args.slots)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
+    default_registry().histogram("launch.serve_batch_ms").observe(dt * 1e3)
     total_tokens = sum(len(r.output) for r in reqs)
     print(f"served {len(reqs)} requests, {total_tokens} tokens "
           f"in {dt:.2f}s ({total_tokens / dt:.1f} tok/s)")

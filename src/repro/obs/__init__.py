@@ -1,0 +1,13 @@
+"""End-to-end observability: metrics registry, spans, JSONL event log
+(:mod:`repro.obs.registry`) and on-device solve traces
+(:mod:`repro.obs.trace`)."""
+from repro.obs.registry import (DEFAULT_WINDOW, EVENT_SCHEMA_VERSION,
+                                Counter, Gauge, Histogram, MetricsRegistry,
+                                NullRegistry, default_registry,
+                                set_default_registry)
+from repro.obs.trace import TRACE_LEN, SolveTrace, instrumented_tol_loop
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "NullRegistry", "default_registry", "set_default_registry",
+           "DEFAULT_WINDOW", "EVENT_SCHEMA_VERSION",
+           "TRACE_LEN", "SolveTrace", "instrumented_tol_loop"]

@@ -1,0 +1,129 @@
+"""On-device solve traces: the residual trajectory ring every tolerance
+loop records, and the one instrumented ``while_loop`` driver they share.
+
+The paper's headline is a wall-clock claim over a *convergence
+trajectory* (100 iterations to a fixed point); evaluating anything that
+perturbs that trajectory — reduced-precision layouts, new operators,
+sharded delta application — needs the per-iteration residuals, not just
+the exit scalar.  :func:`instrumented_tol_loop` is the single tolerance
+loop the engine's six backends (dense, ell/SELL, pallas_dense, bsr,
+dense_sharded, ell_sharded), the reference ``pagerank_dense``, and the
+Gauss–Southwell push all now run:
+
+* the convergence-watchdog carry of :mod:`repro.pagerank.resilience`
+  (NaN/Inf + sustained-growth abort), previously copy-pasted into every
+  loop body, defined once;
+* a fixed-size (:data:`TRACE_LEN`) residual ring in the loop carry —
+  ``ring[i % TRACE_LEN] = residual_i``, one scalar dynamic-update-slice
+  per iteration, **zero host syncs**: the ring stays a device array until
+  :attr:`SolveTrace.residuals` is first read.
+
+The ring is fixed-size so the carry shape is static (no recompiles as
+``max_iters`` changes) and the cost is O(1) memory; a solve longer than
+``TRACE_LEN`` keeps the *last* ``TRACE_LEN`` residuals — the tail of the
+trajectory, where convergence (or divergence) is decided.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["TRACE_LEN", "SolveTrace", "instrumented_tol_loop"]
+
+TRACE_LEN = 64
+
+
+class SolveTrace:
+    """Lazy host view of the residual trajectory ring.
+
+    Holds the device ring until :attr:`residuals` is read (the zero-sync
+    contract: a solve's trace costs nothing unless inspected).  The
+    trajectory is returned oldest-first; for solves longer than the ring,
+    it is the last ``len(ring)`` residuals.
+    """
+
+    def __init__(self, ring: jax.Array, iters):
+        self._ring = ring
+        self._iters = iters
+        self._cache: np.ndarray | None = None
+
+    @property
+    def n_iters(self) -> int:
+        return int(self._iters)
+
+    @property
+    def residuals(self) -> np.ndarray:
+        """Chronological residual trajectory (first host sync happens
+        here)."""
+        if self._cache is None:
+            ring = np.asarray(self._ring)
+            it = int(self._iters)
+            if it <= len(ring):
+                self._cache = ring[:it].copy()
+            else:
+                k = it % len(ring)
+                self._cache = np.concatenate([ring[k:], ring[:k]])
+        return self._cache
+
+    @property
+    def ratios(self) -> np.ndarray:
+        """Per-iteration contraction ratios ``res[i+1] / res[i]`` — ~d for
+        a healthy damped power iteration, > 1 sustained when diverging."""
+        r = self.residuals
+        if len(r) < 2:
+            return np.empty(0, r.dtype if len(r) else np.float32)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            return r[1:] / r[:-1]
+
+    def __len__(self) -> int:
+        return len(self.residuals)
+
+    def __repr__(self) -> str:       # sync-free (repr must stay cheap)
+        return f"SolveTrace(window={int(self._ring.shape[0])})"
+
+
+def instrumented_tol_loop(step, state0, *, tol, max_iters: int,
+                          watchdog: bool = True, trace: bool = True,
+                          res0=None, dtype=jnp.float32,
+                          trace_len: int = TRACE_LEN):
+    """The shared tolerance-terminated loop: run ``step`` until the
+    residual drops to ``tol``, ``max_iters`` is hit, or the watchdog
+    aborts.
+
+    ``step(state) -> (new_state, residual)`` supplies the backend's
+    arithmetic; ``state`` is any pytree (the rank vector, the Pallas
+    ``(xp, t)`` carry, the push ``(x, r)`` pair).  ``watchdog`` and
+    ``trace`` are trace-time constants — the caller's ``jit`` must mark
+    them static — so the uninstrumented program carries no ring and no
+    growth counter updates.  ``res0`` seeds the loop residual (default
+    ``inf``: always take the first step); the push path passes its real
+    initial residual so an already-converged frontier costs zero sweeps.
+
+    Returns ``(state, iters, residual, grow, ring)``; ``ring`` is ``None``
+    with ``trace=False`` (a static branch — it vanishes from the jitted
+    output pytree).
+    """
+    from repro.pagerank.resilience import watchdog_init, watchdog_update
+
+    res_init = (jnp.asarray(jnp.inf, dtype) if res0 is None
+                else jnp.asarray(res0, dtype))
+    ring0 = jnp.zeros((trace_len if trace else 0,), jnp.float32)
+
+    def cond(carry):
+        _, i, res, _, ok, _ = carry
+        return (res > tol) & (i < max_iters) & ok
+
+    def body(carry):
+        state, i, res, grow, ok, ring = carry
+        new_state, new_res = step(state)
+        if watchdog:
+            grow, ok = watchdog_update(new_res, res, grow)
+        if trace:
+            ring = ring.at[jnp.mod(i, trace_len)].set(new_res)
+        return new_state, i + 1, new_res, grow, ok, ring
+
+    state, iters, res, grow, _, ring = jax.lax.while_loop(
+        cond, body, (state0, jnp.int32(0), res_init, *watchdog_init(),
+                     ring0))
+    return state, iters, res, grow, (ring if trace else None)

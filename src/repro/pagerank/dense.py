@@ -1,7 +1,9 @@
 """Dense PageRank power iteration (reference implementation).
 
-``pagerank_dense`` iterates to an L1-residual tolerance via
-``lax.while_loop``; ``pagerank_dense_fixed`` runs the paper's fixed
+``pagerank_dense`` iterates to an L1-residual tolerance via the shared
+instrumented ``lax.while_loop`` (:func:`repro.obs.trace
+.instrumented_tol_loop` — convergence watchdog + optional on-device
+residual-trajectory ring); ``pagerank_dense_fixed`` runs the paper's fixed
 100-iteration schedule via ``lax.scan`` (what Fig. 6B times).
 
 Both route through :func:`repro.pagerank.steps.dense_step` — the same
@@ -16,53 +18,32 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.pagerank.resilience import watchdog_init, watchdog_update
+from repro.obs.trace import instrumented_tol_loop
 from repro.pagerank.steps import dense_step
 
 
-@partial(jax.jit, static_argnames=("max_iters", "watchdog"))
+@partial(jax.jit, static_argnames=("max_iters", "watchdog", "trace"))
 def pagerank_dense(H: jax.Array, d: float = 0.85, tol: float = 1e-6,
                    max_iters: int = 1000, x0: jax.Array | None = None,
-                   watchdog: bool = True):
-    """Returns ``(pr, n_iters, residual, grow)``.  ``x0`` warm-starts the
-    loop from a previous rank vector; ``None`` is the classic uniform cold
-    start.  ``watchdog`` (default on) aborts on NaN/Inf or sustained
+                   watchdog: bool = True, trace: bool = False):
+    """Returns ``(pr, n_iters, residual, grow, ring)``.  ``x0`` warm-starts
+    the loop from a previous rank vector; ``None`` is the classic uniform
+    cold start.  ``watchdog`` (default on) aborts on NaN/Inf or sustained
     residual growth instead of spinning to ``max_iters``; ``grow`` is the
     watchdog's consecutive-growth counter at exit (0 when healthy), which
     :func:`repro.pagerank.resilience.make_solve_info` turns into the
-    ``diverged`` flag."""
+    ``diverged`` flag.  ``trace`` additionally records the per-iteration
+    residual ring on device (``ring`` is ``None`` when off)."""
     n = H.shape[0]
     pr0 = jnp.full((n,), 1.0 / n, H.dtype) if x0 is None else x0
 
-    if not watchdog:
-        def cond(state):
-            _, i, res = state
-            return (res > tol) & (i < max_iters)
-
-        def body(state):
-            pr, i, _ = state
-            new = dense_step(H, pr, d)
-            return new, i + 1, jnp.sum(jnp.abs(new - pr))
-
-        pr, iters, res = jax.lax.while_loop(
-            cond, body, (pr0, jnp.int32(0), jnp.asarray(jnp.inf, H.dtype)))
-        return pr, iters, res, jnp.int32(0)
-
-    def cond(state):
-        _, i, res, _, ok = state
-        return (res > tol) & (i < max_iters) & ok
-
-    def body(state):
-        pr, i, res, grow, _ = state
+    def step(pr):
         new = dense_step(H, pr, d)
-        new_res = jnp.sum(jnp.abs(new - pr))
-        grow, ok = watchdog_update(new_res, res, grow)
-        return new, i + 1, new_res, grow, ok
+        return new, jnp.sum(jnp.abs(new - pr))
 
-    pr, iters, res, grow, _ = jax.lax.while_loop(
-        cond, body, (pr0, jnp.int32(0), jnp.asarray(jnp.inf, H.dtype),
-                     *watchdog_init()))
-    return pr, iters, res, grow
+    return instrumented_tol_loop(step, pr0, tol=tol, max_iters=max_iters,
+                                 watchdog=watchdog, trace=trace,
+                                 dtype=H.dtype)
 
 
 @partial(jax.jit, static_argnames=("n_iters",))

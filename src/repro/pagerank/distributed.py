@@ -41,7 +41,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import fabric_matvec as fm
 from repro.core.fabric_matvec import shard_map
-from repro.pagerank.resilience import watchdog_init, watchdog_update
+from repro.obs.trace import instrumented_tol_loop
 from repro.pagerank.steps import ppr_step_batched
 
 
@@ -103,55 +103,32 @@ def pagerank_distributed_tol(H: jax.Array, mesh: Mesh, tol: float = 1e-6,
                              dangling: jax.Array | None = None,
                              n_true: int | None = None,
                              x0: jax.Array | None = None,
-                             watchdog: bool = True):
+                             watchdog: bool = True, trace: bool = False):
     """Tolerance-terminated fabric-schedule PageRank; the L1 residual is a
     replicated scalar, so every device exits the ``while_loop`` on the same
     iteration — and so the convergence watchdog's abort decision (NaN/Inf
     or sustained residual growth, armed by default) is identical on every
-    device too.  Returns ``(pr, n_iters, residual, grow)`` with ``grow``
-    the watchdog's consecutive-growth counter at exit.  ``x0`` (padded to
-    N, zeros on the pad tail) warm-starts the loop."""
+    device too.  Returns ``(pr, n_iters, residual, grow, ring)`` with
+    ``grow`` the watchdog's consecutive-growth counter at exit and ``ring``
+    the on-device residual-trajectory ring (``None`` with ``trace=False``;
+    replicated — every device records the same residuals).  ``x0`` (padded
+    to N, zeros on the pad tail) warm-starts the loop."""
     n = H.shape[0]
     nt = int(n if n_true is None else n_true)
     mask = jax.lax.with_sharding_constraint(
         _real_mask(n, nt, H.dtype), NamedSharding(mesh, P(col_axis)))
 
     def step(pr):
-        return _dense_iter(H, pr, dangling, mesh, row_axis, col_axis, d, nt)
+        new = _dense_iter(H, pr, dangling, mesh, row_axis, col_axis, d, nt)
+        return new, jnp.sum(jnp.abs(new - pr) * mask)
 
     pr0 = jax.lax.with_sharding_constraint(
         _pr0(n, nt, H.dtype) if x0 is None else x0.astype(H.dtype),
         NamedSharding(mesh, P(col_axis)))
 
-    if not watchdog:
-        def cond(state):
-            _, i, res = state
-            return (res > tol) & (i < max_iters)
-
-        def body(state):
-            pr, i, _ = state
-            new = step(pr)
-            return new, i + 1, jnp.sum(jnp.abs(new - pr) * mask)
-
-        pr, iters, res = jax.lax.while_loop(
-            cond, body, (pr0, jnp.int32(0), jnp.asarray(jnp.inf, H.dtype)))
-        return pr, iters, res, jnp.int32(0)
-
-    def cond(state):
-        _, i, res, _, ok = state
-        return (res > tol) & (i < max_iters) & ok
-
-    def body(state):
-        pr, i, res, grow, _ = state
-        new = step(pr)
-        new_res = jnp.sum(jnp.abs(new - pr) * mask)
-        grow, ok = watchdog_update(new_res, res, grow)
-        return new, i + 1, new_res, grow, ok
-
-    pr, iters, res, grow, _ = jax.lax.while_loop(
-        cond, body, (pr0, jnp.int32(0), jnp.asarray(jnp.inf, H.dtype),
-                     *watchdog_init()))
-    return pr, iters, res, grow
+    return instrumented_tol_loop(step, pr0, tol=tol, max_iters=max_iters,
+                                 watchdog=watchdog, trace=trace,
+                                 dtype=H.dtype)
 
 
 # --------------------------------------------------------------------------- #
@@ -201,16 +178,20 @@ def pagerank_distributed_sparse_tol(ell_data: jax.Array, ell_idx: jax.Array,
                                     axes: tuple[str, ...] = ("data", "model"),
                                     n_true: int | None = None,
                                     x0: jax.Array | None = None,
-                                    watchdog: bool = True):
+                                    watchdog: bool = True,
+                                    trace: bool = False):
     """Tolerance-terminated row-sharded ELL PageRank.  After each
     iteration's ``all_gather`` every device holds the full fresh vector, so
     the residual (and the exit decision — including the convergence
     watchdog's abort on NaN/Inf or sustained residual growth, armed by
     default) is computed identically everywhere without an extra
-    collective.  Returns ``(pr, n_iters, residual, grow)`` with ``grow``
-    the watchdog's consecutive-growth counter at exit.  ``x0`` (padded to
-    N, zeros on the pad tail) warm-starts the loop; it rides into the
-    kernel as a replicated operand like the dangling mask."""
+    collective.  Returns ``(pr, n_iters, residual, grow, ring)`` with
+    ``grow`` the watchdog's consecutive-growth counter at exit and ``ring``
+    the residual-trajectory ring (``None`` with ``trace=False``; computed
+    from the replicated residual, so it is identical — and replicated —
+    across devices).  ``x0`` (padded to N, zeros on the pad tail)
+    warm-starts the loop; it rides into the kernel as a replicated operand
+    like the dangling mask."""
     n = ell_data.shape[0]
     nt = int(n if n_true is None else n_true)
     dang = (jnp.zeros((n,), jnp.float32) if dangling is None
@@ -221,43 +202,22 @@ def pagerank_distributed_sparse_tol(ell_data: jax.Array, ell_idx: jax.Array,
         mask = _real_mask(n, nt)
 
         def step(pr):
-            return _ell_block_iter(data_blk, idx_blk, pr, dang_full,
-                                   axes, d, nt)
+            new = _ell_block_iter(data_blk, idx_blk, pr, dang_full,
+                                  axes, d, nt)
+            return new, jnp.sum(jnp.abs(new - pr) * mask)
 
-        if not watchdog:
-            def cond(state):
-                _, i, res = state
-                return (res > tol) & (i < max_iters)
+        pr, iters, res, grow, ring = instrumented_tol_loop(
+            step, pr0_full, tol=tol, max_iters=max_iters,
+            watchdog=watchdog, trace=trace)
+        return ((pr, iters, res, grow, ring) if trace
+                else (pr, iters, res, grow))
 
-            def body(state):
-                pr, i, _ = state
-                new = step(pr)
-                return new, i + 1, jnp.sum(jnp.abs(new - pr) * mask)
-
-            pr, iters, res = jax.lax.while_loop(
-                cond, body, (pr0_full, jnp.int32(0), jnp.float32(jnp.inf)))
-            return pr, iters, res, jnp.int32(0)
-
-        def cond(state):
-            _, i, res, _, ok = state
-            return (res > tol) & (i < max_iters) & ok
-
-        def body(state):
-            pr, i, res, grow, _ = state
-            new = step(pr)
-            new_res = jnp.sum(jnp.abs(new - pr) * mask)
-            grow, ok = watchdog_update(new_res, res, grow)
-            return new, i + 1, new_res, grow, ok
-
-        pr, iters, res, grow, _ = jax.lax.while_loop(
-            cond, body, (pr0_full, jnp.int32(0), jnp.float32(jnp.inf),
-                         *watchdog_init()))
-        return pr, iters, res, grow
-
-    return shard_map(
+    out = shard_map(
         kernel, mesh,
         in_specs=(P(axes), P(axes), P(), P()),
-        out_specs=(P(), P(), P(), P()))(ell_data, ell_idx, dang, pr0)
+        out_specs=(P(),) * (5 if trace else 4))(ell_data, ell_idx, dang,
+                                                pr0)
+    return out if trace else (*out, None)
 
 
 # --------------------------------------------------------------------------- #

@@ -56,9 +56,9 @@ import numpy as np
 from repro.graph import transition as tr
 from repro.graph.delta import GraphDelta, edge_keys
 from repro.kernels.streaming_matvec import streaming_matvec
+from repro.obs.trace import SolveTrace, instrumented_tol_loop
 from repro.pagerank.engine import PageRankEngine, _dedupe_edges, _matvec
-from repro.pagerank.resilience import (EngineSnapshot, make_solve_info,
-                                       watchdog_init, watchdog_update)
+from repro.pagerank.resilience import EngineSnapshot, make_solve_info
 
 __all__ = ["DynamicPageRankEngine", "UpdateInfo", "PATCHABLE_BACKENDS"]
 
@@ -169,7 +169,7 @@ def _scatter_cols(H, ci, mats, *, n: int):
 # the "sell" tag, so the engine's generic whole-loop dispatchers (run /       #
 # run_tol / ppr) drive it unchanged via self._mv_backend.                     #
 # --------------------------------------------------------------------------- #
-def _push_loop(Ab, x0, tol, n, max_pushes):
+def _push_loop(Ab, x0, tol, n, max_pushes, trace=False):
     """Shared frontier loop.  ``Ab(x) = A·x + b`` is the damped PageRank
     affine operator; the invariant solved for is the fixed point
     ``x = Ab(x)``.  Every sweep pushes the whole frontier mask
@@ -178,34 +178,31 @@ def _push_loop(Ab, x0, tol, n, max_pushes):
     one operator sweep per push round, same cost as an incremental
     residual update but immune to float drift in the bookkeeping.
 
-    Carries the same convergence watchdog as the engine's tolerance loops
-    (NaN/Inf and sustained residual-growth abort; a corrupted layout makes
-    the push residual *grow* every sweep, so without the watchdog the loop
-    spins all ``max_pushes``).  Returns ``(x, iters, residual, grow)``."""
+    Runs on the same instrumented driver as the engine's tolerance loops
+    (:func:`repro.obs.trace.instrumented_tol_loop`: NaN/Inf and
+    sustained-growth watchdog — a corrupted layout makes the push residual
+    *grow* every sweep, so without it the loop spins all ``max_pushes`` —
+    plus the optional residual-trajectory ring).  The real initial
+    residual seeds the loop, so an already-converged frontier exits in
+    zero sweeps.  Returns ``(x, iters, residual, grow, ring)``."""
     thresh = tol / n
 
-    def cond(state):
-        _, _, i, res, _, ok = state
-        return (res > tol) & (i < max_pushes) & ok
-
-    def body(state):
-        x, r, i, res, grow, _ = state
+    def step(state):
+        x, r = state
         x = x + r * (jnp.abs(r) >= thresh).astype(x.dtype)
         r = Ab(x) - x
-        new_res = jnp.sum(jnp.abs(r))
-        grow, ok = watchdog_update(new_res, res, grow)
-        return x, r, i + 1, new_res, grow, ok
+        return (x, r), jnp.sum(jnp.abs(r))
 
     r0 = Ab(x0) - x0
-    x, r, iters, res, grow, _ = jax.lax.while_loop(
-        cond, body, (x0, r0, jnp.int32(0), jnp.sum(jnp.abs(r0)),
-                     *watchdog_init()))
-    return x, iters, res, grow
+    (x, _), iters, res, grow, ring = instrumented_tol_loop(
+        step, (x0, r0), tol=tol, max_iters=max_pushes, watchdog=True,
+        trace=trace, res0=jnp.sum(jnp.abs(r0)))
+    return x, iters, res, grow, ring
 
 
-@partial(jax.jit, static_argnames=("backend", "n", "max_pushes"))
+@partial(jax.jit, static_argnames=("backend", "n", "max_pushes", "trace"))
 def _push_tol(operands, dang, d, tol, x0, *, backend: str, n: int,
-              max_pushes: int):
+              max_pushes: int, trace: bool = False):
     if backend == "dense":
         # the dangling-FIXED dense operand: the uniform leak columns are
         # already folded in, so A·x is just d·H·x
@@ -216,13 +213,14 @@ def _push_tol(operands, dang, d, tol, x0, *, backend: str, n: int,
             return d * (_matvec(backend, operands, x)
                         + jnp.sum(x * dang) / n) + (1.0 - d) / n
 
-    return _push_loop(Ab, x0, tol, n, max_pushes)
+    return _push_loop(Ab, x0, tol, n, max_pushes, trace=trace)
 
 
 @partial(jax.jit, static_argnames=("n", "block_n", "block_m", "interpret",
-                                   "max_pushes"))
+                                   "max_pushes", "trace"))
 def _push_pallas(Hp, dangp, d, tol, x0, *, n: int, block_n: int,
-                 block_m: int, interpret: bool, max_pushes: int):
+                 block_m: int, interpret: bool, max_pushes: int,
+                 trace: bool = False):
     # state lives in the pre-padded (1, Mp) layout; pad entries of H, dang
     # and x0 are zero, so the residual is identically zero on the pad tail
     # and the frontier never touches it
@@ -236,8 +234,9 @@ def _push_pallas(Hp, dangp, d, tol, x0, *, n: int, block_n: int,
         leak = jnp.sum(xp * dangp)
         return d * (y + leak / n * real) + (1.0 - d) / n * real
 
-    xp, iters, res, grow = _push_loop(Ab, xp0, tol, n, max_pushes)
-    return xp[0, :n], iters, res, grow
+    xp, iters, res, grow, ring = _push_loop(Ab, xp0, tol, n, max_pushes,
+                                            trace=trace)
+    return xp[0, :n], iters, res, grow, ring
 
 
 # --------------------------------------------------------------------------- #
@@ -392,7 +391,8 @@ class DynamicPageRankEngine(PageRankEngine):
         layout corruption, where the edge set is still correct but the
         prepared arrays are not.  ``x0`` warm-starts from known-good ranks
         (e.g. the last snapshot).  Returns the ``run_tol`` result."""
-        self._rebuild()
+        with self.metrics.span("rebuild", backend=self.backend):
+            self._rebuild()
         return self.run_tol(tol=tol, max_iters=max_iters, x0=x0, **kw)
 
     # --------------------------- the update ---------------------------- #
@@ -404,7 +404,26 @@ class DynamicPageRankEngine(PageRankEngine):
         Returns ``(pr, UpdateInfo)``.  ``strategy``: ``"auto"`` (default
         policy by delta size), or force ``"push"`` / ``"warm"`` /
         ``"rebuild"``.
+
+        Every update lands in the engine's metrics registry: an
+        ``update.<strategy>`` counter (``noop`` included), the overall
+        ``span.update`` latency histogram, per-strategy
+        ``span.update.patch`` / ``span.update.rebuild`` layout timings,
+        and one ``update`` event with the delta size and solve verdict.
         """
+        with self.metrics.span("update"):
+            pr, info = self._update(delta, tol=tol, max_iters=max_iters,
+                                    strategy=strategy)
+        self.metrics.counter(f"update.{info.strategy}").inc()
+        self.metrics.event("update", strategy=info.strategy,
+                           n_ins=info.n_inserted, n_del=info.n_deleted,
+                           iters=info.iters, residual=info.residual,
+                           overflow=info.overflow, healthy=info.healthy)
+        return pr, info
+
+    def _update(self, delta: GraphDelta, *, tol: float,
+                max_iters: int, strategy: str
+                ) -> tuple[jax.Array, UpdateInfo]:
         if strategy not in ("auto", "push", "warm", "rebuild"):
             raise ValueError(f"unknown strategy {strategy!r}")
         plan = self._plan(delta)
@@ -442,15 +461,25 @@ class DynamicPageRankEngine(PageRankEngine):
         try:
             self._commit(plan)
             if strategy == "rebuild":
-                self._rebuild()
+                with self.metrics.span("update.rebuild"):
+                    self._rebuild()
                 rows = cols = 0
             else:
-                rows, cols = self._patch(plan)
+                with self.metrics.span("update.patch"):
+                    rows, cols = self._patch(plan)
             x0 = self._pr
             if strategy == "push":
-                pr, iters, res, grow = self._push(x0, tol, max_iters)
-                self.last_solve_info = make_solve_info(
-                    iters, res, grow, tol=tol, max_iters=max_iters)
+                with self.metrics.span("solve", backend=self.backend,
+                                       strategy="push"):
+                    pr, iters, res, grow, ring = self._push(
+                        x0, tol, max_iters)
+                    self.last_solve_info = make_solve_info(
+                        iters, res, grow, tol=tol, max_iters=max_iters,
+                        trace=(SolveTrace(ring, iters)
+                               if ring is not None else None))
+                self.metrics.counter("engine.solves").inc()
+                self.metrics.counter(
+                    f"engine.solve.{self.last_solve_info.status}").inc()
                 self._pr = pr
             else:
                 pr, iters, res = self.run_tol(tol=tol, max_iters=max_iters,
@@ -617,7 +646,8 @@ class DynamicPageRankEngine(PageRankEngine):
         return data, idx
 
     # ------------------------------ push -------------------------------- #
-    def _push(self, x0: jax.Array, tol: float, max_pushes: int):
+    def _push(self, x0: jax.Array, tol: float, max_pushes: int,
+              trace: bool = True):
         if self.backend == "pallas_dense":
             Hp, dangp = self._operands
             return _push_pallas(Hp, dangp, self.d, jnp.float32(tol),
@@ -625,8 +655,8 @@ class DynamicPageRankEngine(PageRankEngine):
                                 block_n=self._block[0],
                                 block_m=self._block[1],
                                 interpret=self.interpret,
-                                max_pushes=max_pushes)
+                                max_pushes=max_pushes, trace=trace)
         return _push_tol(self._operands, self._dang, self.d,
                          jnp.float32(tol), jnp.asarray(x0),
                          backend=self._mv_backend, n=self.n,
-                         max_pushes=max_pushes)
+                         max_pushes=max_pushes, trace=trace)

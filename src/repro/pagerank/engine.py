@@ -63,10 +63,11 @@ from repro.kernels.pagerank_step import (pad_pagerank_operands,
 from repro.kernels.streaming_matvec import streaming_matvec
 from repro.launch.mesh import make_mesh
 from repro.pagerank import distributed as dist
+from repro.obs.registry import default_registry
+from repro.obs.trace import SolveTrace, instrumented_tol_loop
 from repro.pagerank.dense import pagerank_dense, pagerank_dense_fixed
 from repro.pagerank.resilience import (ConvergenceError, SolveResult,
-                                       make_solve_info, watchdog_init,
-                                       watchdog_update)
+                                       make_solve_info)
 from repro.pagerank.steps import (dense_step, ppr_step, ppr_step_batched,
                                   seed_matrix, sparse_step)
 
@@ -204,47 +205,24 @@ def _run_fixed(operands, dang, d, *, backend: str, n: int, n_iters: int):
     return pr
 
 
-@partial(jax.jit, static_argnames=("backend", "n", "max_iters", "watchdog"))
+@partial(jax.jit, static_argnames=("backend", "n", "max_iters", "watchdog",
+                                   "trace"))
 def _run_tol(operands, dang, d, tol, x0, *, backend: str, n: int,
-             max_iters: int, watchdog: bool = True):
-    """Returns ``(pr, iters, residual, grow)`` — ``grow`` is the
+             max_iters: int, watchdog: bool = True, trace: bool = False):
+    """Returns ``(pr, iters, residual, grow, ring)`` — ``grow`` is the
     convergence watchdog's consecutive-growth counter at exit (0 with
-    ``watchdog=False``, the overhead-measurement baseline)."""
+    ``watchdog=False``, the overhead-measurement baseline) and ``ring``
+    the on-device residual-trajectory ring (``None`` with
+    ``trace=False``)."""
     pr0 = jnp.full((n,), 1.0 / n, jnp.float32) if x0 is None else x0
 
     def step(pr):
-        return sparse_step(lambda v: _matvec(backend, operands, v),
-                           pr, dang, d, n)
+        new = sparse_step(lambda v: _matvec(backend, operands, v),
+                          pr, dang, d, n)
+        return new, jnp.sum(jnp.abs(new - pr))
 
-    if not watchdog:
-        def cond(state):
-            _, i, res = state
-            return (res > tol) & (i < max_iters)
-
-        def body(state):
-            pr, i, _ = state
-            new = step(pr)
-            return new, i + 1, jnp.sum(jnp.abs(new - pr))
-
-        pr, iters, res = jax.lax.while_loop(
-            cond, body, (pr0, jnp.int32(0), jnp.float32(jnp.inf)))
-        return pr, iters, res, jnp.int32(0)
-
-    def cond(state):
-        _, i, res, _, ok = state
-        return (res > tol) & (i < max_iters) & ok
-
-    def body(state):
-        pr, i, res, grow, _ = state
-        new = step(pr)
-        new_res = jnp.sum(jnp.abs(new - pr))
-        grow, ok = watchdog_update(new_res, res, grow)
-        return new, i + 1, new_res, grow, ok
-
-    pr, iters, res, grow, _ = jax.lax.while_loop(
-        cond, body, (pr0, jnp.int32(0), jnp.float32(jnp.inf),
-                     *watchdog_init()))
-    return pr, iters, res, grow
+    return instrumented_tol_loop(step, pr0, tol=tol, max_iters=max_iters,
+                                 watchdog=watchdog, trace=trace)
 
 
 @partial(jax.jit, static_argnames=("backend", "n", "n_iters"))
@@ -283,14 +261,15 @@ def _run_fixed_dense_sharded(H, dang, *, mesh, axes, n_true, n_iters, d):
 
 
 @partial(jax.jit, static_argnames=("mesh", "axes", "n_true", "max_iters",
-                                   "d", "watchdog"))
+                                   "d", "watchdog", "trace"))
 def _run_tol_dense_sharded(H, dang, tol, x0, *, mesh, axes, n_true,
-                           max_iters, d, watchdog: bool = True):
-    pr, iters, res, grow = dist.pagerank_distributed_tol(
+                           max_iters, d, watchdog: bool = True,
+                           trace: bool = False):
+    pr, iters, res, grow, ring = dist.pagerank_distributed_tol(
         H, mesh, tol=tol, max_iters=max_iters, d=d, row_axis=axes[0],
         col_axis=axes[1], dangling=dang, n_true=n_true, x0=x0,
-        watchdog=watchdog)
-    return pr[:n_true], iters, res, grow
+        watchdog=watchdog, trace=trace)
+    return pr[:n_true], iters, res, grow, ring
 
 
 @partial(jax.jit, static_argnames=("mesh", "axes", "n_true", "n_iters", "d"))
@@ -312,13 +291,14 @@ def _run_fixed_ell_sharded(data, idx, dang, *, mesh, axes, n_true, n_iters,
 
 
 @partial(jax.jit, static_argnames=("mesh", "axes", "n_true", "max_iters",
-                                   "d", "watchdog"))
+                                   "d", "watchdog", "trace"))
 def _run_tol_ell_sharded(data, idx, dang, tol, x0, *, mesh, axes, n_true,
-                         max_iters, d, watchdog: bool = True):
-    pr, iters, res, grow = dist.pagerank_distributed_sparse_tol(
+                         max_iters, d, watchdog: bool = True,
+                         trace: bool = False):
+    pr, iters, res, grow, ring = dist.pagerank_distributed_sparse_tol(
         data, idx, mesh, tol=tol, max_iters=max_iters, d=d, dangling=dang,
-        axes=axes, n_true=n_true, x0=x0, watchdog=watchdog)
-    return pr[:n_true], iters, res, grow
+        axes=axes, n_true=n_true, x0=x0, watchdog=watchdog, trace=trace)
+    return pr[:n_true], iters, res, grow, ring
 
 
 @partial(jax.jit, static_argnames=("mesh", "axes", "n_true", "n_iters", "d"))
@@ -352,50 +332,28 @@ def _run_fixed_pallas(Hp, dangp, *, n: int, n_iters: int, d: float,
 
 
 @partial(jax.jit, static_argnames=("n", "max_iters", "d", "block_n",
-                                   "block_m", "interpret", "watchdog"))
+                                   "block_m", "interpret", "watchdog",
+                                   "trace"))
 def _run_tol_pallas(Hp, dangp, tol, x0, *, n: int, max_iters: int, d: float,
                     block_n: int, block_m: int, interpret: bool,
-                    watchdog: bool = True):
+                    watchdog: bool = True, trace: bool = False):
     Mp = Hp.shape[1]
     x0 = jnp.full((n,), 1.0 / n, jnp.float32) if x0 is None else x0
     xp0 = jnp.pad(x0, (0, Mp - n))[None, :]
     t0 = d * jnp.sum(xp0 * dangp) / n + (1.0 - d) / n
 
-    def fused_step(xp, t):
+    def step(carry):
+        xp, t = carry
         yp, leak = pagerank_step_fused(Hp, xp, dangp, t, d=d,
                                        block_n=block_n, block_m=block_m,
                                        interpret=interpret)
         res = jnp.sum(jnp.abs(yp[0, :n] - xp[0, :n]))
-        return yp, d * leak / n + (1.0 - d) / n, res
+        return (yp, d * leak / n + (1.0 - d) / n), res
 
-    if not watchdog:
-        def cond(state):
-            _, _, i, res = state
-            return (res > tol) & (i < max_iters)
-
-        def body(state):
-            xp, t, i, _ = state
-            yp, t, res = fused_step(xp, t)
-            return yp, t, i + 1, res
-
-        xp, _, iters, res = jax.lax.while_loop(
-            cond, body, (xp0, t0, jnp.int32(0), jnp.float32(jnp.inf)))
-        return xp[0, :n], iters, res, jnp.int32(0)
-
-    def cond(state):
-        _, _, i, res, _, ok = state
-        return (res > tol) & (i < max_iters) & ok
-
-    def body(state):
-        xp, t, i, res, grow, _ = state
-        yp, t, new_res = fused_step(xp, t)
-        grow, ok = watchdog_update(new_res, res, grow)
-        return yp, t, i + 1, new_res, grow, ok
-
-    xp, _, iters, res, grow, _ = jax.lax.while_loop(
-        cond, body, (xp0, t0, jnp.int32(0), jnp.float32(jnp.inf),
-                     *watchdog_init()))
-    return xp[0, :n], iters, res, grow
+    (xp, _), iters, res, grow, ring = instrumented_tol_loop(
+        step, (xp0, t0), tol=tol, max_iters=max_iters, watchdog=watchdog,
+        trace=trace)
+    return xp[0, :n], iters, res, grow, ring
 
 
 @partial(jax.jit, static_argnames=("n", "n_iters", "d", "block_n",
@@ -448,7 +406,8 @@ class PageRankEngine:
                  d: float = 0.85, backend: str = "auto",
                  block_n: int = 256, block_m: int = 256,
                  bsr_block_size: int = 128, ell_k: int | None = None,
-                 interpret: bool | None = None, mesh: Mesh | None = None):
+                 interpret: bool | None = None, mesh: Mesh | None = None,
+                 metrics=None):
         self.n = int(n)
         self.d = float(d)
         src, dst = _dedupe_edges(np.asarray(src), np.asarray(dst), self.n)
@@ -469,7 +428,11 @@ class PageRankEngine:
         # warn-once latch for silently-exhausted solves
         self.last_solve_info = None
         self._warned_nonconverged = False
-        self._prepare_layout(src, dst)
+        # metrics sink: the process default registry unless injected (a
+        # NullRegistry injects the uninstrumented overhead baseline)
+        self.metrics = metrics if metrics is not None else default_registry()
+        with self.metrics.span("prepare", backend=self.backend):
+            self._prepare_layout(src, dst)
 
     def _prepare_layout(self, src: np.ndarray, dst: np.ndarray) -> None:
         """Build (or rebuild) the backend's prepared device layout from a
@@ -605,7 +568,8 @@ class PageRankEngine:
 
     def run_tol(self, tol: float = 1e-6, max_iters: int = 1000,
                 x0: np.ndarray | jax.Array | None = None, *,
-                watchdog: bool = True, raise_on_fail: bool = False):
+                watchdog: bool = True, raise_on_fail: bool = False,
+                trace: bool = True):
         """Tolerance-terminated power iteration; one compiled dispatch.
         Returns a :class:`~repro.pagerank.resilience.SolveResult` — still
         the classic ``(pr, n_iters, residual)`` 3-tuple, now carrying the
@@ -626,46 +590,64 @@ class PageRankEngine:
         indistinguishable from a converged one; now it warns once per
         engine — or raises
         :class:`~repro.pagerank.resilience.ConvergenceError` with
-        ``raise_on_fail=True``."""
+        ``raise_on_fail=True``.
+
+        ``trace`` (default on) records the per-iteration residual ring on
+        device (:class:`~repro.obs.trace.SolveTrace`, surfaced as
+        ``result.info.trace`` — zero host syncs until its ``residuals``
+        are read); ``trace=False`` compiles the ring out entirely."""
         x0 = None if x0 is None else jnp.asarray(x0, jnp.float32)
-        if self.backend == "dense_sharded":
-            out = _run_tol_dense_sharded(
-                self._operands[0], self._dang, jnp.float32(tol),
-                self._pad_x0(x0), mesh=self.mesh, axes=self._axes,
-                n_true=self.n, max_iters=max_iters, d=self.d,
-                watchdog=watchdog)
-        elif self.backend == "ell_sharded":
-            out = _run_tol_ell_sharded(
-                *self._operands, self._dang, jnp.float32(tol),
-                self._pad_x0(x0), mesh=self.mesh, axes=self._axes,
-                n_true=self.n, max_iters=max_iters, d=self.d,
-                watchdog=watchdog)
-        elif self.backend == "pallas_dense":
-            Hp, dangp = self._operands
-            out = _run_tol_pallas(
-                Hp, dangp, jnp.float32(tol), x0, n=self.n,
-                max_iters=max_iters, d=self.d, block_n=self._block[0],
-                block_m=self._block[1], interpret=self.interpret,
-                watchdog=watchdog)
-        elif self.backend == "dense":
-            out = pagerank_dense(self._operands[0], d=self.d, tol=tol,
-                                 max_iters=max_iters, x0=x0,
-                                 watchdog=watchdog)
-        else:
-            out = _run_tol(self._operands, self._dang, self.d,
-                           jnp.float32(tol), x0, backend=self._mv_backend,
-                           n=self.n, max_iters=max_iters, watchdog=watchdog)
-        return self._finish_solve(out, tol, max_iters, raise_on_fail)
+        with self.metrics.span("solve", backend=self.backend):
+            if self.backend == "dense_sharded":
+                out = _run_tol_dense_sharded(
+                    self._operands[0], self._dang, jnp.float32(tol),
+                    self._pad_x0(x0), mesh=self.mesh, axes=self._axes,
+                    n_true=self.n, max_iters=max_iters, d=self.d,
+                    watchdog=watchdog, trace=trace)
+            elif self.backend == "ell_sharded":
+                out = _run_tol_ell_sharded(
+                    *self._operands, self._dang, jnp.float32(tol),
+                    self._pad_x0(x0), mesh=self.mesh, axes=self._axes,
+                    n_true=self.n, max_iters=max_iters, d=self.d,
+                    watchdog=watchdog, trace=trace)
+            elif self.backend == "pallas_dense":
+                Hp, dangp = self._operands
+                out = _run_tol_pallas(
+                    Hp, dangp, jnp.float32(tol), x0, n=self.n,
+                    max_iters=max_iters, d=self.d, block_n=self._block[0],
+                    block_m=self._block[1], interpret=self.interpret,
+                    watchdog=watchdog, trace=trace)
+            elif self.backend == "dense":
+                out = pagerank_dense(self._operands[0], d=self.d, tol=tol,
+                                     max_iters=max_iters, x0=x0,
+                                     watchdog=watchdog, trace=trace)
+            else:
+                out = _run_tol(self._operands, self._dang, self.d,
+                               jnp.float32(tol), x0,
+                               backend=self._mv_backend, n=self.n,
+                               max_iters=max_iters, watchdog=watchdog,
+                               trace=trace)
+            return self._finish_solve(out, tol, max_iters, raise_on_fail)
 
     def _finish_solve(self, out, tol: float, max_iters: int,
                       raise_on_fail: bool) -> SolveResult:
         """Host-side epilogue of every tolerance solve: build the
-        :class:`SolveInfo` from the loop's exit scalars, record it, and
-        apply the raise/warn-once policy for non-converged solves."""
-        pr, iters, res, grow = out
+        :class:`SolveInfo` from the loop's exit scalars, record it (plus
+        the solve counters and event in the metrics registry), and apply
+        the raise/warn-once policy for non-converged solves."""
+        pr, iters, res, grow, ring = out
+        trace = SolveTrace(ring, iters) if ring is not None else None
         info = make_solve_info(iters, res, grow, tol=tol,
-                               max_iters=max_iters)
+                               max_iters=max_iters, trace=trace)
         self.last_solve_info = info
+        m = self.metrics
+        m.counter("engine.solves").inc()
+        m.counter(f"engine.solve.{info.status}").inc()
+        m.event("solve", backend=self.backend, iters=info.iters,
+                residual=info.residual, status=info.status)
+        if info.failed:
+            m.event("watchdog", backend=self.backend, iters=info.iters,
+                    residual=info.residual, status=info.status)
         if not info.converged:
             if raise_on_fail:
                 raise ConvergenceError(info)
@@ -697,6 +679,13 @@ class PageRankEngine:
         On the sharded tiers the query axis is sharded across the mesh
         (padded up to the shard count with zero columns, sliced back), so a
         multi-user serve flush spreads over devices unchanged."""
+        with self.metrics.span("ppr", backend=self.backend,
+                               q=len(seed_sets)):
+            self.metrics.counter("engine.ppr_queries").inc(len(seed_sets))
+            return self._ppr(seed_sets, n_iters)
+
+    def _ppr(self, seed_sets: Sequence[np.ndarray],
+             n_iters: int) -> jax.Array:
         V = seed_matrix(self.n, seed_sets)
         if self.backend in SHARDED_BACKENDS:
             q = V.shape[1]

@@ -90,7 +90,13 @@ class SolveInfo:
     Exactly one of ``converged`` / ``diverged`` / ``nonfinite`` /
     ``exhausted`` describes the exit; ``failed`` groups the two poisoned
     exits (the vector must not be served), ``exhausted`` is the legal-but-
-    unconverged case ``run_tol`` used to return silently."""
+    unconverged case ``run_tol`` used to return silently.
+
+    ``iters`` / ``residual`` are populated on every backend — including
+    the Gauss–Southwell push path, where ``iters`` is the sweep count —
+    and ``trace`` carries the on-device residual trajectory
+    (:class:`repro.obs.trace.SolveTrace`, lazy: no host sync until read)
+    when the solve was run with tracing on."""
 
     iters: int
     residual: float
@@ -99,6 +105,13 @@ class SolveInfo:
     converged: bool
     diverged: bool
     nonfinite: bool
+    trace: object | None = None   # SolveTrace; object to keep eq/repr cheap
+
+    @property
+    def iterations(self) -> int:
+        """Alias of ``iters`` — the stable name downstream tooling keys
+        on (sweeps for the push path, loop iterations everywhere else)."""
+        return self.iters
 
     @property
     def failed(self) -> bool:
@@ -107,6 +120,13 @@ class SolveInfo:
     @property
     def exhausted(self) -> bool:
         return not (self.converged or self.failed)
+
+    @property
+    def status(self) -> str:
+        """One-word exit verdict for metrics labels and event logs."""
+        return ("converged" if self.converged else
+                "nonfinite" if self.nonfinite else
+                "diverged" if self.diverged else "exhausted")
 
 
 class SolveResult(tuple):
@@ -133,6 +153,11 @@ class SolveResult(tuple):
     def residual(self):
         return self[2]
 
+    @property
+    def trace(self):
+        """The solve's residual trajectory (``info.trace`` shortcut)."""
+        return self.info.trace
+
 
 class ConvergenceError(RuntimeError):
     """Raised by ``run_tol(raise_on_fail=True)`` when the solve did not
@@ -150,10 +175,11 @@ class ConvergenceError(RuntimeError):
 
 
 def make_solve_info(iters, residual, grow, *, tol: float,
-                    max_iters: int) -> SolveInfo:
+                    max_iters: int, trace=None) -> SolveInfo:
     """Build the host-side :class:`SolveInfo` from the device scalars every
     watchdogged loop returns (``grow`` is the consecutive-growth counter
-    at exit)."""
+    at exit; ``trace`` the lazy :class:`~repro.obs.trace.SolveTrace` when
+    the loop recorded its residual ring)."""
     iters = int(iters)
     residual = float(residual)
     grow = int(grow)
@@ -162,7 +188,7 @@ def make_solve_info(iters, residual, grow, *, tol: float,
     converged = (not nonfinite) and (not diverged) and residual <= tol
     return SolveInfo(iters=iters, residual=residual, tol=float(tol),
                      max_iters=int(max_iters), converged=converged,
-                     diverged=diverged, nonfinite=nonfinite)
+                     diverged=diverged, nonfinite=nonfinite, trace=trace)
 
 
 # --------------------------------------------------------------------------- #

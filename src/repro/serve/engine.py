@@ -11,6 +11,7 @@ batching a la vLLM/Orca, collapsed to the synchronous JAX step model).
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable
 
 import jax
@@ -21,6 +22,7 @@ from repro.configs.base import ModelConfig
 from repro.graph.validate import (DeadLetterQueue, ValidationPolicy,
                                   validate_delta)
 from repro.models import model as M
+from repro.obs.registry import default_registry
 from repro.pagerank.engine import PageRankEngine
 from repro.pagerank.resilience import (RankStore, ResilientRefresher,
                                        RetryPolicy, ppr_healthy)
@@ -212,7 +214,8 @@ class PageRankQueryEngine:
 
     def __init__(self, engine: PageRankEngine, n_iters: int = 100,
                  max_batch: int = 8, refresh_tol: float = 1e-6,
-                 resilience: ServeResilience | None = None):
+                 resilience: ServeResilience | None = None,
+                 metrics=None):
         self.engine = engine
         self.n_iters = n_iters
         self.max_batch = max_batch
@@ -224,6 +227,14 @@ class PageRankQueryEngine:
         self.resilience = resilience
         self.last_refresh_outcome = None
         self._stale = False
+        # metrics sink: share the engine's registry by default so solves,
+        # updates, and serves land in one event log
+        self.metrics = (metrics if metrics is not None
+                        else getattr(engine, "metrics", None)
+                        or default_registry())
+        # freshness clock: when the served ranks last matched the stream
+        # (start of life counts as fresh — nothing has been pushed yet)
+        self._last_refresh_t = time.monotonic()
         if resilience is not None:
             self.dead_letters = DeadLetterQueue(
                 maxlen=resilience.dead_letter_maxlen)
@@ -282,6 +293,12 @@ class PageRankQueryEngine:
         result = validate_delta(delta, self.engine.n,
                                 self.resilience.validation)
         self.dead_letters.extend(result.dead_letters)
+        if result.dead_letters:
+            n_edges = sum(dl.n_edges for dl in result.dead_letters)
+            self.metrics.counter("serve.dead_letters").inc(n_edges)
+            self.metrics.event(
+                "dead_letter", n_edges=n_edges,
+                reasons=sorted({dl.reason for dl in result.dead_letters}))
         if result.delta is not None:
             self._pending_deltas.append(result.delta.canonical(
                 self.engine.n, symmetric=self.engine.symmetric))
@@ -317,15 +334,31 @@ class PageRankQueryEngine:
                 raise
             self.n_refreshes += 1
             self.last_update_info = info
+            self._last_refresh_t = time.monotonic()
+            self.metrics.counter("serve.refresh.ok").inc()
+            self.metrics.event("refresh", applied=True, attempts=1,
+                               status="ok", strategy=info.strategy)
             return [info]
         self._ensure_baseline()
         outcome = self.refresher.refresh(self.engine, merged,
                                          tol=self.refresh_tol)
         self.last_refresh_outcome = outcome
         self._stale = not outcome.delta_applied
+        info = outcome.update_info
+        self.metrics.counter(f"serve.refresh.{outcome.status}").inc()
+        self.metrics.event("refresh", applied=outcome.delta_applied,
+                           attempts=outcome.attempts,
+                           status=outcome.status,
+                           strategy=getattr(info, "strategy", None))
+        if info is not None and not info.healthy:
+            self.metrics.event("watchdog", source="refresh",
+                               strategy=info.strategy,
+                               diverged=info.diverged,
+                               nonfinite=info.nonfinite)
         if outcome.delta_applied:
             self.n_refreshes += 1
             self.last_update_info = outcome.update_info
+            self._last_refresh_t = time.monotonic()
         else:
             # the graph never took the delta (every retry raised, or the
             # engine was rolled back to the snapshot) — re-queue it ahead
@@ -344,7 +377,33 @@ class PageRankQueryEngine:
         bookkeeping, else restore the last-known-good snapshot) and a
         re-serve; if that also fails, queries are answered from the last
         good *global* rank vector — finite, sum-to-1, tagged
-        ``"degraded"`` — and the call never raises."""
+        ``"degraded"`` — and the call never raises.
+
+        Every non-empty flush records one ``serve`` event and a
+        ``serve.batch_ms`` latency sample (refresh included — the number a
+        waiting query actually experiences), bumps the batch/query
+        counters (per-status in resilient mode), and sets the
+        ``serve.freshness_lag_s`` gauge to the served ranks' age."""
+        t0 = time.perf_counter()
+        batch = self._flush()
+        if not batch:
+            return batch
+        ms = (time.perf_counter() - t0) * 1e3
+        lag = time.monotonic() - self._last_refresh_t
+        status = "legacy" if self.resilience is None else batch[0].status
+        m = self.metrics
+        m.histogram("serve.batch_ms").observe(ms)
+        m.gauge("serve.freshness_lag_s").set(lag)
+        m.counter("serve.batches").inc()
+        m.counter("serve.queries").inc(len(batch))
+        if self.resilience is not None:
+            m.counter(f"serve.queries.{status}").inc(len(batch))
+        m.event("serve", batch=len(batch), freshness_lag_s=lag,
+                graph_version=batch[0].graph_version, ms=ms,
+                status=status)
+        return batch
+
+    def _flush(self) -> list[PPRQuery]:
         if self._pending_deltas:
             self.refresh()
         batch, self._queue = self._queue, []

@@ -106,3 +106,24 @@ def test_committed_bench_artifact_dynamic_claims_hold():
     # the crossover sweep must exercise every strategy of the auto policy
     assert {r["strategy"] for r in dyn["delta_size_sweep"]} == {
         "push", "warm", "rebuild"}
+
+
+def test_committed_bench_artifact_observability_claims_hold():
+    """The ``observability`` block (benchmarks/observability_bench.py) must
+    keep the acceptance claims: the solve-trace ring and the full metrics
+    registry each cost <= 3% at the paper-scale N=5000, and the JSONL
+    event log alone reproduces the serve story exactly."""
+    with open(BENCH_PATH) as f:
+        obs = json.load(f)["observability"]
+    assert obs["n"] == 5000 and obs["backend"] == "ell"
+    assert obs["claim"]["solve_overhead_le_3pct"] is True
+    assert obs["claim"]["serve_overhead_le_3pct"] is True
+    assert obs["claim"]["report_roundtrip_exact"] is True
+    assert obs["trace_overhead_pct"] <= 3.0
+    assert obs["serve_overhead_pct"] <= 3.0
+    rt = obs["roundtrip"]
+    assert rt["exact"] is True and rt["mismatches"] == []
+    # the seeded run must actually exercise the degradation ladder
+    assert rt["saw_fresh_and_stale"] is True
+    assert rt["dead_letter_edges"] > 0
+    assert rt["refresh_outcomes"].get("failed", 0) >= 1

@@ -51,7 +51,7 @@ def test_sharded_early_exit_across_mesh(net, backend):
     assert 0 < int(iters) < 500
     assert float(res) <= 1e-7
     from repro.pagerank import pagerank_dense
-    ref, ref_iters, _, _ = pagerank_dense(H, tol=1e-7, max_iters=500)
+    ref, ref_iters, _, _, _ = pagerank_dense(H, tol=1e-7, max_iters=500)
     assert abs(int(iters) - int(ref_iters)) <= 2
     assert float(jnp.max(jnp.abs(pr - ref))) <= TOL
 

@@ -1,0 +1,340 @@
+"""Observability layer: registry export stability, deterministic
+quantiles, JSONL event schema, on-device solve traces on every backend,
+SolveInfo iteration parity, and the serve -> JSONL -> report exact
+round-trip."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.graph import generators as gen
+from repro.graph.delta import GraphDelta
+from repro.obs.registry import (DEFAULT_WINDOW, EVENT_SCHEMA_VERSION,
+                                Histogram, MetricsRegistry, NullRegistry)
+from repro.obs.trace import TRACE_LEN, SolveTrace
+from repro.pagerank.dynamic import DynamicPageRankEngine
+from repro.pagerank.engine import BACKENDS, PageRankEngine
+from repro.serve.engine import PageRankQueryEngine, ServeResilience
+
+
+def _graph(n=48, seed=0):
+    return gen.protein_network(n, seed=seed)
+
+
+# --------------------------------------------------------------------------- #
+# registry                                                                    #
+# --------------------------------------------------------------------------- #
+def test_registry_export_roundtrips_json():
+    reg = MetricsRegistry()
+    reg.counter("a.b").inc(3)
+    reg.gauge("lag").set(1.5)
+    reg.histogram("ms").observe(2.0)
+    reg.histogram("ms").observe(4.0)
+    with reg.span("work", tag="x"):
+        pass
+    d = reg.as_dict()
+    again = json.loads(json.dumps(d))
+    assert again == d
+    assert again["counters"]["a.b"] == 3
+    assert again["gauges"]["lag"] == 1.5
+    assert again["histograms"]["ms"]["count"] == 2
+    assert "span.work" in again["histograms"]
+    # stable key order: sorted names
+    assert list(again["counters"]) == sorted(again["counters"])
+    assert list(again["histograms"]) == sorted(again["histograms"])
+
+
+def test_histogram_quantiles_deterministic_under_seeded_workload():
+    rng = np.random.default_rng(42)
+    vals = rng.exponential(10.0, size=5000)
+    h1, h2 = Histogram(DEFAULT_WINDOW), Histogram(DEFAULT_WINDOW)
+    for v in vals:
+        h1.observe(v)
+        h2.observe(float(v))
+    assert h1.summary() == h2.summary()
+    # nearest-rank over the last-`window` observations, by definition
+    tail = sorted(float(v) for v in vals[-DEFAULT_WINDOW:])
+    import math
+    for q in (0.5, 0.95, 0.99):
+        want = tail[min(max(1, math.ceil(q * len(tail))), len(tail)) - 1]
+        assert h1.quantile(q) == want
+    # full-stream stats are over everything, not just the window
+    assert h1.count == len(vals)
+    assert h1.min == float(vals.min()) and h1.max == float(vals.max())
+
+
+def test_histogram_single_value_and_window_eviction():
+    h = Histogram(window=4)
+    h.observe(7.0)
+    assert h.quantile(0.5) == 7.0 and h.quantile(0.99) == 7.0
+    for v in (1.0, 2.0, 3.0, 4.0, 5.0):
+        h.observe(v)
+    assert h.quantile(0.5) == 3.0          # window holds [2, 3, 4, 5]
+    assert h.count == 6 and h.max == 7.0   # stream stats keep everything
+
+
+def test_jsonl_event_schema_golden(tmp_path):
+    path = str(tmp_path / "events.jsonl")
+    reg = MetricsRegistry(jsonl_path=path)
+    reg.event("serve", ms=1.25, batch=4, status="fresh")
+    reg.event("refresh", status="ok", applied=True)
+    reg.close()
+    lines = [json.loads(line) for line in open(path)]
+    assert len(lines) == 2
+    for ev in lines:
+        # golden schema: version, monotonic relative timestamp, kind, then
+        # the caller's fields in sorted key order
+        keys = list(ev)
+        assert keys[:3] == ["v", "t_ms", "kind"]
+        assert keys[3:] == sorted(keys[3:])
+        assert ev["v"] == EVENT_SCHEMA_VERSION
+        assert isinstance(ev["t_ms"], (int, float)) and ev["t_ms"] >= 0
+    assert lines[0]["kind"] == "serve" and lines[0]["batch"] == 4
+    assert lines[1]["t_ms"] >= lines[0]["t_ms"]      # monotonic
+    # the in-memory log and the file agree
+    assert reg.events == lines
+
+
+def test_event_retention_bounded():
+    reg = MetricsRegistry(max_events=8)
+    for i in range(20):
+        reg.event("tick", i=i)
+    assert len(reg.events) == 8
+    assert reg.events_dropped == 12
+    assert reg.as_dict()["n_events"] == 8
+    assert reg.events[0]["i"] == 12                  # oldest retained
+
+
+def test_null_registry_is_inert():
+    reg = NullRegistry()
+    reg.counter("c").inc(5)
+    reg.gauge("g").set(1.0)
+    reg.histogram("h").observe(3.0)
+    reg.event("anything", x=1)
+    with reg.span("s"):
+        pass
+    d = reg.as_dict()
+    assert d["counters"] == {} and d["histograms"] == {}
+    assert d["n_events"] == 0
+    assert reg.histogram("h").quantile(0.5) is None
+
+
+# --------------------------------------------------------------------------- #
+# on-device solve traces, every backend                                       #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_solve_trace_every_backend(backend):
+    n = 48
+    src, dst = _graph(n)
+    eng = PageRankEngine(src, dst, n, backend=backend,
+                         metrics=NullRegistry())
+    res = eng.run_tol(1e-7, max_iters=300)
+    tr = res.info.trace
+    assert isinstance(tr, SolveTrace)
+    assert tr.n_iters == res.info.iterations == int(res.iters)
+    r = tr.residuals
+    assert len(r) == min(tr.n_iters, TRACE_LEN)
+    assert np.isfinite(r).all() and (r > 0).all()
+    # last recorded residual IS the solve's exit residual
+    assert r[-1] == pytest.approx(float(res.residual), rel=1e-6)
+    # healthy damped power iteration: strictly contracting tail
+    assert (tr.ratios < 1.0).all()
+    # trace=False compiles the ring out
+    assert eng.run_tol(1e-7, trace=False).info.trace is None
+
+
+def test_trace_ring_wraparound_keeps_tail():
+    n = 48
+    src, dst = _graph(n)
+    eng = PageRankEngine(src, dst, n, backend="ell",
+                         metrics=NullRegistry())
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        # tol=-1 pins the iteration count (the float32 residual hits an
+        # exact 0.0 fixed point well before 74 iterations on a graph this
+        # small, so tol=0.0 would exit early); watchdog off because the
+        # noise-floor jitter would (correctly) trip the growth abort
+        short = eng.run_tol(tol=-1.0, max_iters=TRACE_LEN,
+                            watchdog=False)
+        res = eng.run_tol(tol=-1.0, max_iters=TRACE_LEN + 10,
+                          watchdog=False)
+    tr = res.info.trace
+    assert tr.n_iters == TRACE_LEN + 10
+    assert len(tr.residuals) == TRACE_LEN
+    # the ring holds the LAST TRACE_LEN residuals, chronological: the
+    # final entry is the exit residual...
+    assert tr.residuals[-1] == pytest.approx(float(res.residual),
+                                             rel=1e-6)
+    # ...and the reconstruction is the deterministic solve's tail: the
+    # wrapped trace shifted by 10 matches the unwrapped trace exactly
+    np.testing.assert_array_equal(tr.residuals[:TRACE_LEN - 10],
+                                  short.info.trace.residuals[10:])
+
+
+@pytest.mark.parametrize("backend", ("dense", "ell", "pallas_dense"))
+def test_solve_info_iteration_parity_incl_push(backend):
+    """Every refresh strategy reports its real iteration/sweep count and
+    final residual through the same SolveInfo surface."""
+    n = 48
+    src, dst = _graph(n)
+    eng = DynamicPageRankEngine(src, dst, n, backend=backend,
+                                metrics=NullRegistry())
+    res = eng.run_tol(1e-7)
+    assert eng.last_solve_info.iterations == int(res.iters) > 0
+    assert eng.last_solve_info.residual == pytest.approx(
+        float(res.residual))
+    # pick edges guaranteed absent, so the delta is not a no-op
+    have = set(zip(src.tolist(), dst.tolist()))
+    new = [(u, v) for u in range(n) for v in range(n)
+           if u != v and (u, v) not in have][:2]
+    _, info = eng.update(GraphDelta.inserts([u for u, _ in new],
+                                            [v for _, v in new]),
+                         strategy="push")
+    assert eng.last_solve_info.iterations == info.iters > 0
+    assert eng.last_solve_info.residual == pytest.approx(info.residual)
+    assert eng.last_solve_info.converged
+    # the push solve records its residual trajectory too
+    tr = eng.last_solve_info.trace
+    assert tr is not None and tr.n_iters == info.iters
+    assert tr.residuals[-1] == pytest.approx(info.residual, rel=1e-6)
+
+
+def test_solve_trace_iteration_parity_across_backends():
+    """All six backends agree on the iteration count and the (near-)
+    identical residual trajectory for the same graph + tolerance."""
+    n = 48
+    src, dst = _graph(n)
+    runs = {}
+    for backend in BACKENDS:
+        eng = PageRankEngine(src, dst, n, backend=backend,
+                             metrics=NullRegistry())
+        res = eng.run_tol(1e-7, max_iters=300)
+        runs[backend] = (res.info.iterations, res.info.trace.residuals)
+    iters = sorted(it for it, _ in runs.values())
+    # float32 accumulation order can move the exit across the tolerance
+    # boundary by one iteration, never more
+    assert iters[-1] - iters[0] <= 1, f"iteration counts disagree: {runs}"
+    ref = runs["dense"][1]
+    for backend, (_, r) in runs.items():
+        k = min(len(r), len(ref))
+        # atol sits just above the float32 noise floor at tol=1e-7:
+        # once residuals reach ~1e-7 the accumulation-order jitter is
+        # the same magnitude as the values themselves
+        np.testing.assert_allclose(r[:k], ref[:k], rtol=5e-4, atol=2e-7,
+                                   err_msg=backend)
+
+
+# --------------------------------------------------------------------------- #
+# engine + serve instrumentation                                              #
+# --------------------------------------------------------------------------- #
+def test_engine_metrics_counters_and_events():
+    n = 48
+    src, dst = _graph(n)
+    reg = MetricsRegistry()
+    eng = DynamicPageRankEngine(src, dst, n, backend="ell", metrics=reg)
+    eng.run_tol(1e-6)
+    # insert edges guaranteed absent, else the delta is a no-op and the
+    # incremental push solve never runs
+    have = set(zip(src.tolist(), dst.tolist()))
+    new = [(u, v) for u in range(n) for v in range(n)
+           if u != v and (u, v) not in have][:2]
+    eng.update(GraphDelta.inserts([u for u, _ in new],
+                                  [v for _, v in new]))
+    eng.ppr([np.array([0]), np.array([1])], n_iters=5)
+    d = reg.as_dict()
+    assert d["counters"]["engine.solves"] == 2
+    assert d["counters"]["engine.solve.converged"] == 2
+    assert d["counters"]["update.push"] == 1
+    assert d["counters"]["engine.ppr_queries"] == 2
+    for span in ("span.prepare", "span.solve", "span.update",
+                 "span.update.patch", "span.ppr"):
+        assert d["histograms"][span]["count"] >= 1, span
+    kinds = [e["kind"] for e in reg.events]
+    assert "solve" in kinds and "update" in kinds
+    ev = next(e for e in reg.events if e["kind"] == "update")
+    assert ev["strategy"] == "push" and ev["healthy"] is True
+
+
+def test_serve_report_roundtrip_exact(tmp_path, monkeypatch):
+    """The acceptance bar: a seeded streaming-serve run's JSONL alone
+    reproduces the fresh/stale/degraded counts, refresh outcomes, and
+    p50/p95 serve latency exactly (obs_report cross-check passes)."""
+    import os
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))), "scripts"))
+    import obs_report
+
+    n = 48
+    src, dst = _graph(n)
+    jsonl = str(tmp_path / "events.jsonl")
+    reg = MetricsRegistry(jsonl_path=jsonl)
+    eng = DynamicPageRankEngine(src, dst, n, backend="ell", metrics=reg)
+    eng.run_tol(1e-6)
+    server = PageRankQueryEngine(eng, n_iters=20, max_batch=10_000,
+                                 resilience=ServeResilience(), metrics=reg)
+    rng = np.random.default_rng(3)
+    # fresh
+    server.push_update(GraphDelta.inserts(rng.integers(0, n, 3),
+                                          rng.integers(0, n, 3)))
+    for uid in range(3):
+        server.submit(uid, rng.integers(0, n, 2))
+    server.flush()
+    # out-of-range ids -> dead letters
+    server.push_update(GraphDelta.inserts([0, n + 1], [n + 2, 1]))
+    # degraded: the batched PPR dispatch raises; recovery is monkeypatched
+    # out so the fallback answers from last-known-good global ranks
+    monkeypatch.setattr(eng, "ppr",
+                        lambda *a, **k: (_ for _ in ()).throw(
+                            RuntimeError("injected")))
+    monkeypatch.setattr(server.refresher, "recover",
+                        lambda *a, **k: None)
+    for uid in range(2):
+        server.submit(uid, rng.integers(0, n, 2))
+    out = server.flush()
+    assert [q.status for q in out] == ["degraded", "degraded"]
+    reg.dump_json(str(tmp_path / "metrics.json"))
+    reg.close()
+
+    derived = obs_report.derive(obs_report.load_events(jsonl))
+    assert derived["queries"] == {"fresh": 3, "degraded": 2}
+    assert derived["refreshes"].get("ok", 0) >= 1
+    assert derived["dead_letters"] == 2
+    errs = obs_report.cross_check(
+        derived, json.load(open(tmp_path / "metrics.json")))
+    assert errs == []
+    # and through main(): exit 0 == exact
+    assert obs_report.main([jsonl, "--metrics",
+                            str(tmp_path / "metrics.json")]) == 0
+
+
+def test_serve_latency_histogram_and_freshness_gauge():
+    n = 48
+    src, dst = _graph(n)
+    reg = MetricsRegistry()
+    eng = DynamicPageRankEngine(src, dst, n, backend="ell", metrics=reg)
+    eng.run_tol(1e-6)
+    server = PageRankQueryEngine(eng, n_iters=10, max_batch=10_000,
+                                 metrics=reg)    # legacy mode
+    server.query_batch([[0], [1], [2]])
+    server.query_batch([[3]])
+    d = reg.as_dict()
+    h = d["histograms"]["serve.batch_ms"]
+    assert h["count"] == 2 and h["p50"] > 0
+    assert d["counters"]["serve.batches"] == 2
+    assert d["counters"]["serve.queries"] == 4
+    assert d["gauges"]["serve.freshness_lag_s"] >= 0
+    ev = [e for e in reg.events if e["kind"] == "serve"]
+    assert len(ev) == 2 and ev[0]["status"] == "legacy"
+
+
+def test_engine_default_registry_shared_with_serve():
+    """Engines built without metrics= land in the process default
+    registry, and the serving layer inherits the engine's registry."""
+    n = 32
+    src, dst = _graph(n)
+    reg = MetricsRegistry()
+    eng = PageRankEngine(src, dst, n, backend="dense", metrics=reg)
+    server = PageRankQueryEngine(eng, n_iters=5)
+    assert server.metrics is reg

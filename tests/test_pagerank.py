@@ -40,7 +40,7 @@ def test_dense_fixed_matches_numpy(small_net):
 
 def test_dense_converges_and_sums_to_one(small_net):
     n, _, _, H = small_net
-    pr, iters, res, _ = pagerank_dense(jnp.asarray(H), tol=1e-6)
+    pr, iters, res, _, _ = pagerank_dense(jnp.asarray(H), tol=1e-6)
     assert float(jnp.sum(pr)) == pytest.approx(1.0, abs=1e-4)
     assert int(iters) < 1000 and float(res) <= 1e-6
     # fixed point: one more application changes nothing
