@@ -29,6 +29,7 @@ def main() -> None:
         sizes, iters = [256], 3
         engine_kw = dict(n=256, iters=3, reps=1, out_path=None)
         dynamic_kw = dict(n=256, reps=1, out_path=None)
+        dynamic_sharded_kw = dict(n=256, reps=1, out_path=None)
         resilience_kw = dict(n=256, iters=10, reps=3, out_path=None)
         obs_kw = dict(n=256, iters=10, reps=3, out_path=None)
     elif quick:
@@ -37,12 +38,14 @@ def main() -> None:
         # reduced-size numbers
         engine_kw = dict(n=1024, iters=20, out_path=None)
         dynamic_kw = dict(n=1024, reps=3, out_path=None)
+        dynamic_sharded_kw = dict(n=1024, reps=1, out_path=None)
         resilience_kw = dict(n=1024, iters=50, reps=3, out_path=None)
         obs_kw = dict(n=1024, iters=50, reps=3, out_path=None)
     else:
         sizes, iters = None, 100
         engine_kw = dict()
         dynamic_kw = dict()
+        dynamic_sharded_kw = dict()
         resilience_kw = dict()
         obs_kw = dict()
 
@@ -54,6 +57,8 @@ def main() -> None:
         kernel_bench.run,
         (lambda: pagerank_engine_bench.run(**engine_kw)),
         (lambda: dynamic_bench.run(**dynamic_kw)),
+        # self-skips (with a note) on a single device
+        (lambda: dynamic_bench.run_sharded(**dynamic_sharded_kw)),
         (lambda: resilience_bench.run(**resilience_kw)),
         (lambda: observability_bench.run(**obs_kw)),
         roofline.run,

@@ -10,7 +10,11 @@ never staler than one refresh interval.
 
 Run:  PYTHONPATH=src python examples/streaming_pagerank.py [--nodes N]
       add ``--jsonl events.jsonl --metrics-out metrics.json`` to record
-      the run's observability stream (inspect with scripts/obs_report.py)
+      the run's observability stream (inspect with scripts/obs_report.py);
+      ``--backend ell_sharded`` (or ``dense_sharded``) runs the same live
+      stream on the multi-device mesh tiers — deltas are patched into the
+      sharded layouts in place and the push runs shard-local (CI smokes
+      this on 8 virtual devices)
 """
 from __future__ import annotations
 
@@ -29,6 +33,12 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--nodes", type=int, default=2000)
     ap.add_argument("--steps", type=int, default=8)
+    ap.add_argument("--backend", default="ell",
+                    choices=["dense", "ell", "bsr", "pallas_dense",
+                             "dense_sharded", "ell_sharded"],
+                    help="engine layout tier (sharded tiers need >1 "
+                         "device, e.g. XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=8)")
     ap.add_argument("--jsonl", default=None,
                     help="append the live observability event log here")
     ap.add_argument("--metrics-out", default=None,
@@ -40,11 +50,13 @@ def main(argv=None) -> None:
     stream = EdgeStream(n, m_edges=4, seed=0, insert_per_step=6,
                         delete_per_step=4)
     src, dst = stream.base()
-    engine = DynamicPageRankEngine(src, dst, n, backend="ell",
+    engine = DynamicPageRankEngine(src, dst, n, backend=args.backend,
                                    metrics=metrics)
     pr, iters, _ = engine.run_tol(1e-7)
+    import jax
     print(f"base graph: n={n}, edges={engine.n_edges}, "
-          f"layout={engine.layout}, cold solve {int(iters)} iters")
+          f"layout={engine.layout}, devices={jax.device_count()}, "
+          f"cold solve {int(iters)} iters")
 
     serve = PageRankQueryEngine(engine, n_iters=60, max_batch=4,
                                 metrics=metrics)
@@ -75,6 +87,8 @@ def main(argv=None) -> None:
     l1 = float(np.abs(np.asarray(engine.ranks) - np.asarray(ref)).sum())
     print(f"after {args.steps} deltas: L1(incremental, from-scratch) = "
           f"{l1:.2e}  (refreshes={serve.n_refreshes})")
+    if l1 > 1e-4:       # CI smoke gate: incremental ranks must track
+        raise SystemExit(f"parity failure: L1={l1:.2e} > 1e-4")
     h = metrics.histogram("serve.batch_ms").summary()
     if h["count"]:
         print(f"serve latency: n={h['count']}  p50={h['p50']:.1f} ms  "

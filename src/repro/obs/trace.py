@@ -69,7 +69,14 @@ class SolveTrace:
     @property
     def ratios(self) -> np.ndarray:
         """Per-iteration contraction ratios ``res[i+1] / res[i]`` — ~d for
-        a healthy damped power iteration, > 1 sustained when diverging."""
+        a healthy damped power iteration, > 1 sustained when diverging.
+
+        Computed on the *unwrapped* chronological trajectory, so every
+        ratio pairs two chronologically adjacent retained samples even
+        after the ring wraps (``iters > TRACE_LEN``): the unwrap in
+        :attr:`residuals` rotates the oldest retained entry (slot
+        ``iters % len(ring)``, the one the next write would evict) to the
+        front, and the dropped pre-wrap residuals never enter a pair."""
         r = self.residuals
         if len(r) < 2:
             return np.empty(0, r.dtype if len(r) else np.float32)

@@ -17,6 +17,14 @@ variant, plus the query-sharded batched-PPR schedules that back the
   ``all_gather`` per iteration.  This is the realistic layout for sparse
   interactomes where N >> nnz/N.
 
+* :func:`push_distributed_tol` / :func:`push_distributed_sparse_tol` — the
+  Gauss–Southwell frontier push of the dynamic-refresh path run shard-local
+  on the same two layouts: the frontier update is elementwise on each
+  device's shard and the residual L1 norm costs one psum per sweep (the
+  dense variant reuses the fabric matvec's collectives; the sparse variant
+  computes it replicated after the per-sweep all_gather, no extra
+  collective at all).
+
 * :func:`ppr_distributed_dense` / :func:`ppr_distributed_sparse` — the
   batched (N, Q) personalized-PageRank matrix sharded over the **query**
   axis, so a multi-user serve batch spreads across the mesh; the dense
@@ -217,6 +225,102 @@ def pagerank_distributed_sparse_tol(ell_data: jax.Array, ell_idx: jax.Array,
         in_specs=(P(axes), P(axes), P(), P()),
         out_specs=(P(),) * (5 if trace else 4))(ell_data, ell_idx, dang,
                                                 pr0)
+    return out if trace else (*out, None)
+
+
+# --------------------------------------------------------------------------- #
+# shard-local Gauss–Southwell push (the dynamic-refresh primitive)            #
+# --------------------------------------------------------------------------- #
+def push_distributed_tol(H: jax.Array, mesh: Mesh, x0: jax.Array,
+                         tol: float = 1e-6, max_pushes: int = 1000,
+                         d: float = 0.85, row_axis: str = "data",
+                         col_axis: str = "model",
+                         dangling: jax.Array | None = None,
+                         n_true: int | None = None,
+                         watchdog: bool = True, trace: bool = False):
+    """Frontier push on the dense fabric layout.  Each sweep pushes every
+    entry of the frontier mask ``|r| >= tol/n`` into the iterate — a purely
+    elementwise update on the P(col)-sharded vector, so the only
+    per-sweep collectives are the ones ``_dense_iter`` already pays (the
+    fabric matvec's psum + re-injection) plus the single psum XLA emits
+    for the replicated residual L1 norm.  The residual is masked to the
+    real nodes, so the pad tail never enters the frontier and stays
+    exactly zero.  Runs under :func:`instrumented_tol_loop` — the
+    convergence watchdog and residual-trajectory ring work on the mesh
+    exactly as they do single-device.  ``x0`` must be padded to N (zeros
+    on the pad tail).  Returns ``(x, sweeps, residual, grow, ring)``."""
+    n = H.shape[0]
+    nt = int(n if n_true is None else n_true)
+    spec = NamedSharding(mesh, P(col_axis))
+    mask = jax.lax.with_sharding_constraint(_real_mask(n, nt, H.dtype), spec)
+    thresh = jnp.asarray(tol, H.dtype) / nt
+
+    def residual(x):
+        new = _dense_iter(H, x, dangling, mesh, row_axis, col_axis, d, nt)
+        return (new - x) * mask
+
+    def step(state):
+        x, r = state
+        x = x + r * (jnp.abs(r) >= thresh).astype(x.dtype)
+        r = residual(x)
+        return (x, r), jnp.sum(jnp.abs(r))
+
+    x0 = jax.lax.with_sharding_constraint(x0.astype(H.dtype), spec)
+    r0 = residual(x0)
+    (x, _), sweeps, res, grow, ring = instrumented_tol_loop(
+        step, (x0, r0), tol=tol, max_iters=max_pushes, watchdog=watchdog,
+        trace=trace, res0=jnp.sum(jnp.abs(r0)), dtype=H.dtype)
+    return x, sweeps, res, grow, ring
+
+
+def push_distributed_sparse_tol(ell_data: jax.Array, ell_idx: jax.Array,
+                                mesh: Mesh, x0: jax.Array, tol: float = 1e-6,
+                                max_pushes: int = 1000, d: float = 0.85,
+                                dangling: jax.Array | None = None,
+                                axes: tuple[str, ...] = ("data", "model"),
+                                n_true: int | None = None,
+                                watchdog: bool = True, trace: bool = False):
+    """Frontier push on the row-sharded ELL layout, as a ``shard_map``
+    kernel mirroring :func:`pagerank_distributed_sparse_tol`: each device
+    sweeps its own row block and the per-sweep ``all_gather`` re-assembles
+    the fresh operator image — after which the residual (and the frontier
+    mask, the watchdog verdict and the while_loop exit) is computed
+    identically on every device from the replicated vector, with no extra
+    collective.  Pad rows have zero ELL data and a zero x0 tail, so their
+    masked residual is identically zero and the frontier never touches
+    them.  Returns ``(x, sweeps, residual, grow, ring)``."""
+    n = ell_data.shape[0]
+    nt = int(n if n_true is None else n_true)
+    dang = (jnp.zeros((n,), jnp.float32) if dangling is None
+            else jnp.asarray(dangling, jnp.float32))
+    x0 = jnp.asarray(x0, jnp.float32)
+
+    def kernel(data_blk, idx_blk, dang_full, x0_full):
+        mask = _real_mask(n, nt)
+        thresh = jnp.float32(tol) / nt
+
+        def residual(x):
+            new = _ell_block_iter(data_blk, idx_blk, x, dang_full, axes,
+                                  d, nt)
+            return (new - x) * mask
+
+        def step(state):
+            x, r = state
+            x = x + r * (jnp.abs(r) >= thresh).astype(x.dtype)
+            r = residual(x)
+            return (x, r), jnp.sum(jnp.abs(r))
+
+        r0 = residual(x0_full)
+        (x, _), sweeps, res, grow, ring = instrumented_tol_loop(
+            step, (x0_full, r0), tol=tol, max_iters=max_pushes,
+            watchdog=watchdog, trace=trace, res0=jnp.sum(jnp.abs(r0)))
+        return ((x, sweeps, res, grow, ring) if trace
+                else (x, sweeps, res, grow))
+
+    out = shard_map(
+        kernel, mesh,
+        in_specs=(P(axes), P(axes), P(), P()),
+        out_specs=(P(),) * (5 if trace else 4))(ell_data, ell_idx, dang, x0)
     return out if trace else (*out, None)
 
 

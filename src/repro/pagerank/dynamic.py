@@ -20,8 +20,9 @@ Three refresh strategies, picked automatically by delta size:
   tolerance loop re-runs with ``x0 =`` previous ranks (the new ``x0``
   threading through every ``run_tol`` backend).
 * **rebuild** — deltas too large (or structurally too disruptive: an ELL
-  row outgrowing its capacity slack, a BSR/sharded layout) fall back to a
-  full layout rebuild, still warm-starting the solve.
+  row outgrowing its capacity slack, a BSR block materializing outside the
+  prepared block structure) fall back to a full layout rebuild, still
+  warm-starting the solve.
 
 Layout patches are in-place in the functional-JAX sense — a scatter into
 the prepared arrays, never a rebuild:
@@ -38,6 +39,31 @@ the prepared arrays, never a rebuild:
   and every affected row is rewritten with one row-scatter per tier.  The
   capacity slack means small deltas never change any array shape; a row
   outgrowing its tier triggers the rebuild fallback.
+* **ell_sharded** — the full-K row layout is built with ``maxdeg + slack``
+  columns of headroom, and every affected row is rewritten shard-local: the
+  row scatter lands on whichever device owns the row under the existing
+  ``NamedSharding`` (a ``with_sharding_constraint`` on the scatter output
+  keeps XLA from resharding), the replicated dangling mask is patched
+  everywhere, and the lazily replicated PPR operand copy is invalidated.
+* **dense_sharded** — the changed columns are scattered under the 2-D
+  fabric ``P(row, col)`` sharding, so each write lands on the mesh column
+  that owns it; the padded tail rows/columns stay zero.
+* **bsr** — value patches inside the *existing* block structure: a host-
+  side sorted (block-row, block-col) -> slot map (reconstructed from the
+  edge set, matching ``BSRMatrix.from_dense``'s row-major block order)
+  addresses every changed entry as ``blocks[br, slot, r%bs, c%bs]``, and
+  one chunked scatter rewrites them.  Deletes zero entries in place (the
+  block stays, harmlessly); only an insert that *materializes a new block*
+  escalates to the rebuild fallback.
+
+The push strategy runs shard-local on the sharded tiers
+(:func:`repro.pagerank.distributed.push_distributed_tol` /
+``push_distributed_sparse_tol``): the frontier update is elementwise on
+each device's shard of the rank vector and the residual L1 norm costs a
+single psum per sweep, inside the same ``instrumented_tol_loop`` driver —
+watchdogs, ``SolveResult.info`` and the residual trace ring work on the
+mesh exactly as they do single-device, and the auto push/warm/rebuild
+policy picks the same strategies sharded as it does single-device.
 
 Host-side bookkeeping is a sorted int64 edge-key set (plus its reverse for
 in-neighbor queries) and the degree vectors, so computing affected
@@ -52,20 +78,25 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.graph import transition as tr
 from repro.graph.delta import GraphDelta, edge_keys
 from repro.kernels.streaming_matvec import streaming_matvec
 from repro.obs.trace import SolveTrace, instrumented_tol_loop
+from repro.pagerank import distributed as dist
 from repro.pagerank.engine import PageRankEngine, _dedupe_edges, _matvec
 from repro.pagerank.resilience import EngineSnapshot, make_solve_info
 
 __all__ = ["DynamicPageRankEngine", "UpdateInfo", "PATCHABLE_BACKENDS"]
 
-# backends whose prepared layouts accept in-place edge-delta patches; the
-# rest (BSR block structure, sharded NamedSharding placements) rebuild —
-# see the ROADMAP open item on sharded delta application
-PATCHABLE_BACKENDS = ("dense", "ell", "pallas_dense")
+# every backend's prepared layout now accepts in-place edge-delta patches
+# (sharded scatters land on the owning devices under the existing
+# NamedShardings; BSR patches values inside the prepared block structure).
+# Capacity overflow — an ELL/SELL row outgrowing its slack, a BSR insert
+# needing a block the layout doesn't hold — still escalates to rebuild.
+PATCHABLE_BACKENDS = ("dense", "ell", "pallas_dense", "bsr",
+                      "dense_sharded", "ell_sharded")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,11 +109,18 @@ class UpdateInfo:
     rows_patched: int
     iters: int                    # push sweeps or warm/rebuild iterations
     residual: float
-    overflow: bool                # an ELL row outgrew its capacity slack
+    overflow: bool                # layout capacity exceeded: an ELL/SELL
+    #                               row outgrew its slack, or a BSR insert
+    #                               needs a block outside the structure
     # convergence-watchdog verdict of the refresh solve (defaults keep
     # positional construction of the original eight fields working)
     diverged: bool = False
     nonfinite: bool = False
+    # the auto policy wanted this strategy but capacity overflow forced a
+    # rebuild instead — ``strategy`` always reports what actually RAN, and
+    # a coercion is recorded here (plus an ``update.coerced`` counter and
+    # ``update_coerced`` metrics event) instead of silently relabelling
+    coerced_from: str | None = None
 
     @property
     def healthy(self) -> bool:
@@ -138,28 +176,49 @@ def _stack_chunks(idx: np.ndarray, *arrs: np.ndarray, cap: int):
     return tuple(np.stack(g) for g in groups)
 
 
-@jax.jit
-def _scatter_rows(A, pos, rows):
-    """A[pos_c] = rows_c for every chunk c; pos (k, cap), rows (k, cap, K)."""
+@partial(jax.jit, static_argnames=("sharding",))
+def _scatter_rows(A, pos, rows, *, sharding=None):
+    """A[pos_c] = rows_c for every chunk c; pos (k, cap), rows (k, cap, K).
+    ``sharding`` (a hashable ``NamedSharding``, static) pins the scatter
+    output to the operand's existing placement, so on the sharded tiers
+    each row write lands on the device that owns the row instead of XLA
+    inventing a reshard."""
     def body(A, args):
         p, r = args
         return A.at[p].set(r), None
 
     A, _ = jax.lax.scan(body, A, (pos, rows))
-    return A
+    return (A if sharding is None
+            else jax.lax.with_sharding_constraint(A, sharding))
 
 
-@partial(jax.jit, static_argnames=("n",))
-def _scatter_cols(H, ci, mats, *, n: int):
+@partial(jax.jit, static_argnames=("n", "sharding"))
+def _scatter_cols(H, ci, mats, *, n: int, sharding=None):
     """H[:n, ci_c] = mats_c.T for every chunk c; ci (k, cap), mats
     (k, cap, n).  ``n`` bounds the row slice (== H rows for the unpadded
-    dense operand, the real-node prefix for the padded Pallas one)."""
+    dense operand, the real-node prefix for the padded Pallas/sharded
+    ones).  ``sharding`` keeps the patched H on its fabric-mesh
+    ``P(row, col)`` placement for the ``dense_sharded`` tier."""
     def body(H, args):
         i, m = args
         return H.at[:n, i].set(m.T), None
 
     H, _ = jax.lax.scan(body, H, (ci, mats))
-    return H
+    return (H if sharding is None
+            else jax.lax.with_sharding_constraint(H, sharding))
+
+
+@jax.jit
+def _scatter_block_vals(B, br, sl, lr, lc, vals):
+    """B[br_c, sl_c, lr_c, lc_c] = vals_c for every chunk c (all (k, cap)):
+    the BSR in-block value patch — entries addressed by (block-row, slot,
+    local row, local col), never touching the block structure."""
+    def body(B, args):
+        b, s, r, c, v = args
+        return B.at[b, s, r, c].set(v), None
+
+    B, _ = jax.lax.scan(body, B, (br, sl, lr, lc, vals))
+    return B
 
 
 # --------------------------------------------------------------------------- #
@@ -239,6 +298,26 @@ def _push_pallas(Hp, dangp, d, tol, x0, *, n: int, block_n: int,
     return xp[0, :n], iters, res, grow, ring
 
 
+@partial(jax.jit, static_argnames=("mesh", "axes", "n_true", "max_pushes",
+                                   "d", "trace"))
+def _push_dense_sharded(H, dang, tol, x0, *, mesh, axes, n_true, max_pushes,
+                        d, trace: bool = False):
+    x, sweeps, res, grow, ring = dist.push_distributed_tol(
+        H, mesh, x0, tol=tol, max_pushes=max_pushes, d=d, row_axis=axes[0],
+        col_axis=axes[1], dangling=dang, n_true=n_true, trace=trace)
+    return x[:n_true], sweeps, res, grow, ring
+
+
+@partial(jax.jit, static_argnames=("mesh", "axes", "n_true", "max_pushes",
+                                   "d", "trace"))
+def _push_ell_sharded(data, idx, dang, tol, x0, *, mesh, axes, n_true,
+                      max_pushes, d, trace: bool = False):
+    x, sweeps, res, grow, ring = dist.push_distributed_sparse_tol(
+        data, idx, mesh, x0, tol=tol, max_pushes=max_pushes, d=d,
+        dangling=dang, axes=axes, n_true=n_true, trace=trace)
+    return x[:n_true], sweeps, res, grow, ring
+
+
 # --------------------------------------------------------------------------- #
 # the dynamic engine                                                          #
 # --------------------------------------------------------------------------- #
@@ -246,7 +325,10 @@ class DynamicPageRankEngine(PageRankEngine):
     """A :class:`PageRankEngine` over a *live* graph.
 
     Same constructor, same ``run`` / ``run_tol`` / ``ppr`` surface (the
-    ``ell`` backend transparently swaps in the patchable SELL layout), plus:
+    ``ell`` backend transparently swaps in the patchable SELL layout; the
+    ``ell_sharded`` layout is built with ``maxdeg + slack`` columns of row
+    headroom; ``bsr`` keeps a host block-structure map for in-block value
+    patches), plus:
 
     * ``update(delta)`` — fold a :class:`~repro.graph.delta.GraphDelta`
       into the prepared layouts and refresh the ranks; returns
@@ -282,6 +364,21 @@ class DynamicPageRankEngine(PageRankEngine):
 
     # --------------------------- layout prep --------------------------- #
     def _prepare_layout(self, src: np.ndarray, dst: np.ndarray) -> None:
+        if self.backend == "ell_sharded":
+            # reserve patch headroom: the engine treats ``_ell_k`` as a
+            # MINIMUM row capacity (never a truncation), so building with
+            # maxdeg + slack keeps every array shape fixed across small
+            # deltas; a row outgrowing K escalates update() to rebuild
+            indeg = np.bincount(np.asarray(dst, np.int64),
+                                minlength=self.n)
+            maxdeg = int(indeg.max()) if len(indeg) else 0
+            self._ell_k = maxdeg + max(4, self._slack)
+            super()._prepare_layout(src, dst)
+            return
+        if self.backend == "bsr":
+            super()._prepare_layout(src, dst)
+            self._bsr_index(src, dst)
+            return
         if self.backend != "ell":
             super()._prepare_layout(src, dst)
             return
@@ -334,6 +431,29 @@ class DynamicPageRankEngine(PageRankEngine):
                           jnp.asarray(inv, jnp.int32))
         self.layout = (f"sell(k_low={k_low}, k_high={k_high}, "
                        f"n_high={len(high_rows)}, slack={self._slack})")
+
+    def _bsr_index(self, src: np.ndarray, dst: np.ndarray) -> None:
+        """Host map of the prepared BSR block structure: sorted int64
+        ``(block-row * nb_c + block-col)`` keys plus each block's slot
+        within its block-row.  ``BSRMatrix.from_dense`` lays blocks out in
+        np.nonzero row-major order with slot = rank since the row start, so
+        the map is reconstructible from the edge set alone — value patches
+        address ``blocks[brow, slot]`` without ever reading device arrays
+        back.  Patches only zero/overwrite entries of existing blocks
+        (structure never changes between rebuilds), so the map stays valid
+        until the next ``_prepare_layout``."""
+        bsr = self._operands[0]
+        bs = int(bsr.block_size)
+        self._bsr_nbc = -(-self.n // bs)
+        pairs = np.unique((np.asarray(dst, np.int64) // bs)
+                          * np.int64(self._bsr_nbc)
+                          + np.asarray(src, np.int64) // bs)
+        brows = pairs // self._bsr_nbc
+        counts = np.bincount(brows, minlength=bsr.blocks.shape[0])
+        starts = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        self._bsr_pairs = pairs
+        self._bsr_slots = (np.arange(len(pairs))
+                           - starts[brows]).astype(np.int64)
 
     # ----------------------- solver front doors ------------------------ #
     @property
@@ -410,11 +530,21 @@ class DynamicPageRankEngine(PageRankEngine):
         ``span.update`` latency histogram, per-strategy
         ``span.update.patch`` / ``span.update.rebuild`` layout timings,
         and one ``update`` event with the delta size and solve verdict.
+        When capacity overflow forces the auto policy to rebuild where the
+        size policy wanted a patch, the coercion is recorded on
+        ``UpdateInfo.coerced_from`` plus an ``update.coerced`` counter and
+        an ``update_coerced`` event — ``.strategy`` never lies about what
+        ran.
         """
         with self.metrics.span("update"):
             pr, info = self._update(delta, tol=tol, max_iters=max_iters,
                                     strategy=strategy)
         self.metrics.counter(f"update.{info.strategy}").inc()
+        if info.coerced_from is not None:
+            self.metrics.counter("update.coerced").inc()
+            self.metrics.event("update_coerced",
+                               requested=info.coerced_from,
+                               ran=info.strategy, overflow=info.overflow)
         self.metrics.event("update", strategy=info.strategy,
                            n_ins=info.n_inserted, n_del=info.n_deleted,
                            iters=info.iters, residual=info.residual,
@@ -435,20 +565,27 @@ class DynamicPageRankEngine(PageRankEngine):
         # engine exactly as it was (no half-applied delta)
         patchable = (self.backend in PATCHABLE_BACKENDS
                      and not plan["overflow"])
+        coerced_from = None
         if strategy == "auto":
-            if (not patchable
-                    or plan["n_changed"] > self.rebuild_frac
+            if (plan["n_changed"] > self.rebuild_frac
                     * max(plan["n_edges_before"], 1)):
                 strategy = "rebuild"
-            elif (self._pr is not None
-                    and plan["n_changed"] <= self.push_max_changed):
-                strategy = "push"
             else:
-                strategy = "warm"
+                want = ("push" if self._pr is not None
+                        and plan["n_changed"] <= self.push_max_changed
+                        else "warm")
+                if patchable:
+                    strategy = want
+                else:
+                    # the size policy wanted a patch but the layout can't
+                    # take one (capacity overflow / block-structure change)
+                    # — record the coercion instead of relabelling it
+                    strategy, coerced_from = "rebuild", want
         elif strategy in ("push", "warm") and not patchable:
             raise ValueError(
                 f"strategy {strategy!r} needs a patchable layout "
-                f"(backend in {PATCHABLE_BACKENDS}, no capacity overflow)")
+                f"(backend in {PATCHABLE_BACKENDS}, no capacity overflow "
+                f"or BSR block-structure change)")
         elif strategy == "push" and self._pr is None:
             raise ValueError("push needs previous ranks; run/run_tol first")
 
@@ -493,7 +630,8 @@ class DynamicPageRankEngine(PageRankEngine):
                               cols, rows, int(iters), float(res),
                               bool(plan["overflow"]),
                               diverged=solve.diverged,
-                              nonfinite=solve.nonfinite)
+                              nonfinite=solve.nonfinite,
+                              coerced_from=coerced_from)
 
     # ------------------------ host bookkeeping ------------------------- #
     def _plan(self, delta: GraphDelta) -> dict | None:
@@ -526,23 +664,44 @@ class DynamicPageRankEngine(PageRankEngine):
         cols = np.unique(changed // n)
         rows = np.empty(0, np.int64)
         overflow = False
-        if self.backend == "ell":
-            # only the row-major SELL layout patches rows (dense/Pallas
-            # rewrite whole columns), so only it pays the neighbor scans
+        extra: dict = {}
+        if self.backend in ("ell", "ell_sharded"):
+            # only the row-major layouts patch rows (dense tiers rewrite
+            # whole columns, BSR individual block entries), so only they
+            # pay the neighbor scans
             parts = [changed % n]
             for u in cols:
                 parts.append(_key_slice(self._keys, int(u), n))
                 parts.append(_key_slice(new_keys, int(u), n))
             rows = np.unique(np.concatenate(parts))
-            k_low, k_high = self._sell_k
-            cap = np.where(self._sell_high[rows], k_high, k_low)
+            if self.backend == "ell":
+                k_low, k_high = self._sell_k
+                cap = np.where(self._sell_high[rows], k_high, k_low)
+            else:           # full-K sharded rows: one capacity for all
+                cap = self._operands[0].shape[1]
             overflow = bool((indeg[rows] > cap).any())
+        elif self.backend == "bsr":
+            # per changed column: its old and new out-neighbor sets (both
+            # sorted — _key_slice walks the sorted keys).  Every entry the
+            # patch touches lives in block (v//bs, u//bs); old entries are
+            # in existing blocks by construction, so only the post-delta
+            # sets can demand a block the structure doesn't hold — that is
+            # the genuine structure change that forces a rebuild.
+            bs = int(self._operands[0].block_size)
+            old_nbrs = [_key_slice(self._keys, int(u), n) for u in cols]
+            new_nbrs = [_key_slice(new_keys, int(u), n) for u in cols]
+            need = [(vv // bs) * np.int64(self._bsr_nbc) + int(u) // bs
+                    for u, vv in zip(cols, new_nbrs) if len(vv)]
+            if need:
+                need = np.unique(np.concatenate(need))
+                overflow = not bool(_in_sorted(self._bsr_pairs, need).all())
+            extra = {"bsr_old": old_nbrs, "bsr_new": new_nbrs}
         return {"cols": cols, "rows": rows, "overflow": overflow,
                 "n_ins": len(eff_ins), "n_del": len(eff_del),
                 "n_changed": len(changed),
                 "n_edges_before": len(self._keys),
                 "keys": new_keys, "rkeys": new_rkeys,
-                "outdeg": outdeg, "indeg": indeg}
+                "outdeg": outdeg, "indeg": indeg, **extra}
 
     def _commit(self, plan: dict) -> None:
         """Swap in the post-delta bookkeeping computed by ``_plan`` (only
@@ -580,15 +739,44 @@ class DynamicPageRankEngine(PageRankEngine):
         dang = self._dang
         for ci, f in _chunks(cols, flags, cap=32):
             dang = dang.at[jnp.asarray(ci)].set(jnp.asarray(f))
+        if self.mesh is not None:
+            # the sharded tiers keep the dangling mask replicated; pin the
+            # patched copy back to P() so no runner pays a reshard
+            dang = jax.device_put(dang, NamedSharding(self.mesh, P()))
         self._dang = dang
-        if self.backend == "dense":
-            mat = np.stack([self._column(int(u), fix_dangling=True)
+        if self.backend in ("dense", "dense_sharded"):
+            # the sharded H is stored dangling-UNFIXED (explicit leak), the
+            # single-device dense operand dangling-fixed
+            mat = np.stack([self._column(int(u), fix_dangling=self.backend
+                                         == "dense")
                             for u in cols], axis=0)        # (C, n)
             ci, mats = _stack_chunks(cols, mat, cap=32)
+            sharding = (None if self.mesh is None
+                        else NamedSharding(self.mesh, P(*self._axes)))
             H = _scatter_cols(self._operands[0], jnp.asarray(ci),
-                              jnp.asarray(mats), n=n)
+                              jnp.asarray(mats), n=n, sharding=sharding)
             self._operands = (H,)
             return 0, len(cols)
+        if self.backend == "bsr":
+            self._patch_bsr(plan)
+            return 0, len(cols)
+        if self.backend == "ell_sharded":
+            # rewrite every affected full-K row shard-local: the scatter
+            # output is pinned to the existing row NamedSharding, so each
+            # write lands on the device owning the row
+            rows = plan["rows"]
+            data_op, idx_op = self._operands
+            data, idx = self._rebuild_rows(rows, int(data_op.shape[1]))
+            pos, dat, ix = _stack_chunks(rows, data, idx, cap=64)
+            sharding = NamedSharding(self.mesh, P(self._axes))
+            pos = jnp.asarray(pos)
+            data_op = _scatter_rows(data_op, pos, jnp.asarray(dat),
+                                    sharding=sharding)
+            idx_op = _scatter_rows(idx_op, pos, jnp.asarray(ix),
+                                   sharding=sharding)
+            self._operands = (data_op, idx_op)
+            self._ppr_operands = None   # lazily replicated PPR copy: stale
+            return len(rows), len(cols)
         if self.backend == "pallas_dense":
             Hp, dangp = self._operands
             mat = np.stack([self._column(int(u), fix_dangling=False)
@@ -621,6 +809,40 @@ class DynamicPageRankEngine(PageRankEngine):
         self._operands = (dl, il, dh, ih, inv)
         return len(rows), len(cols)
 
+    def _patch_bsr(self, plan: dict) -> None:
+        """Rewrite every changed entry inside the existing BSR block
+        structure with one chunked scatter.  For each changed column ``u``
+        the union of its old and new out-neighbors is touched: entries in
+        ``new`` get the recomputed ``1/outdeg`` value, entries only in
+        ``old`` are zeroed in place (their block stays — harmless, the
+        padded slots already accumulate zeros).  ``_plan`` guaranteed every
+        touched block exists (a miss is the structure change that forces a
+        rebuild), so the host (block-row, block-col) -> slot map resolves
+        every coordinate."""
+        bsr = self._operands[0]
+        bs = int(bsr.block_size)
+        parts = []
+        for u, old, new in zip(plan["cols"], plan["bsr_old"],
+                               plan["bsr_new"]):
+            vs = np.union1d(old, new)
+            if len(vs) == 0:
+                continue
+            val = np.zeros(len(vs), np.float32)
+            if len(new):
+                val[_in_sorted(new, vs)] = 1.0 / len(new)
+            key = (vs // bs) * np.int64(self._bsr_nbc) + int(u) // bs
+            slot = self._bsr_slots[np.searchsorted(self._bsr_pairs, key)]
+            parts.append((vs // bs, slot, vs % bs,
+                          np.full(len(vs), int(u) % bs, np.int64), val))
+        if not parts:
+            return
+        br, sl, lr, lc, vals = (np.concatenate(a) for a in zip(*parts))
+        b, s, r, c, v = _stack_chunks(br, sl, lr, lc, vals, cap=256)
+        blocks = _scatter_block_vals(
+            bsr.blocks, jnp.asarray(b), jnp.asarray(s), jnp.asarray(r),
+            jnp.asarray(c), jnp.asarray(v))
+        self._operands = (dataclasses.replace(bsr, blocks=blocks),)
+
     def _rebuild_rows(self, sel: np.ndarray, k: int
                       ) -> tuple[np.ndarray, np.ndarray]:
         """Recompute the SELL rows ``sel`` (width ``k``) from the current
@@ -648,6 +870,18 @@ class DynamicPageRankEngine(PageRankEngine):
     # ------------------------------ push -------------------------------- #
     def _push(self, x0: jax.Array, tol: float, max_pushes: int,
               trace: bool = True):
+        if self.backend == "dense_sharded":
+            return _push_dense_sharded(
+                self._operands[0], self._dang, jnp.float32(tol),
+                self._pad_x0(jnp.asarray(x0, jnp.float32)),
+                mesh=self.mesh, axes=self._axes, n_true=self.n,
+                max_pushes=max_pushes, d=self.d, trace=trace)
+        if self.backend == "ell_sharded":
+            return _push_ell_sharded(
+                *self._operands, self._dang, jnp.float32(tol),
+                self._pad_x0(jnp.asarray(x0, jnp.float32)),
+                mesh=self.mesh, axes=self._axes, n_true=self.n,
+                max_pushes=max_pushes, d=self.d, trace=trace)
         if self.backend == "pallas_dense":
             Hp, dangp = self._operands
             return _push_pallas(Hp, dangp, self.d, jnp.float32(tol),

@@ -57,6 +57,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.graph import delta as delta_mod
 from repro.graph import transition as tr
+from repro.graph.sparse import ELLMatrix
 from repro.kernels import ops as kops
 from repro.kernels.pagerank_step import (pad_pagerank_operands,
                                          pagerank_step_fused)
@@ -487,8 +488,15 @@ class PageRankEngine:
             ndev = self.mesh.size
             self._n_pad = -(-self.n // ndev) * ndev
             # full-K ELL (not the split layout): row blocks must be
-            # self-contained so each device sweeps its rows with one gather
-            ell = tr.build_transition_ell(src, dst, n)
+            # self-contained so each device sweeps its rows with one gather.
+            # ``ell_k`` here is a MINIMUM row capacity, never a truncation:
+            # the dynamic engine passes maxdeg + slack so in-place row
+            # patches have headroom without any array shape changing
+            csr = tr.build_transition_csr(src, dst, n)
+            counts = np.diff(np.asarray(csr.indptr))
+            maxdeg = int(counts.max()) if len(counts) else 0
+            k = maxdeg if ell_k is None else max(int(ell_k), maxdeg)
+            ell = ELLMatrix.from_csr(csr, k=k)
             data = np.zeros((self._n_pad, ell.k), np.float32)
             idx = np.zeros((self._n_pad, ell.k), np.int32)
             data[:n] = np.asarray(ell.data)

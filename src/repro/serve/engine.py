@@ -12,6 +12,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from collections import deque
 from typing import Callable
 
 import jax
@@ -80,16 +81,21 @@ class ServeEngine:
         """Run all requests to completion with ``n_slots`` device slots.
         Sequences are prefixed independently (per-slot prefill) and decoded
         as one batched step; finished slots are refilled from the queue."""
-        queue = list(requests)
+        queue = deque(requests)     # popleft is O(1); list.pop(0) was O(n)
         slots: list[Request | None] = [None] * n_slots
-        caches: list = [None] * n_slots
+        # exposed as self._caches so tests (and memory accounting) can
+        # verify drained slots release their KV cache
+        self._caches = caches = [None] * n_slots
         last_tok = np.zeros((n_slots,), np.int32)
 
         def fill_slot(i: int) -> None:
             if not queue:
+                # drain: drop the finished sequence's KV cache too, so it
+                # stops pinning device memory for the rest of the serve
                 slots[i] = None
+                caches[i] = None
                 return
-            req = queue.pop(0)
+            req = queue.popleft()
             logits, cache = self._prefill(
                 self.params, {"tokens": jnp.asarray(req.prompt)[None, :]})
             tok = self._sample(logits, req.temperature)

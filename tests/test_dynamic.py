@@ -17,8 +17,9 @@ from repro.graph.delta import (EdgeStream, GraphDelta, apply_delta, compose,
                                edge_keys)
 from repro.pagerank import DynamicPageRankEngine, PageRankEngine
 
-DYN_BACKENDS = ["dense", "ell", "pallas_dense"]   # patchable layouts
+DYN_BACKENDS = ["dense", "ell", "pallas_dense", "bsr"]  # patchable layouts
 ALL_LOCAL = ["dense", "ell", "bsr", "pallas_dense"]
+SHARDED = ["dense_sharded", "ell_sharded"]        # patchable on the mesh
 
 
 def _scratch_ranks(src, dst, n, delta=None):
@@ -218,15 +219,16 @@ def test_update_properties_random_deltas(backend, seed, dseed):
 def test_insert_then_delete_is_noop(net, backend):
     """Applying a delta and its inverse restores the prepared layout
     arrays exactly and the ranks to within the refresh tolerance."""
+    import jax
     n, src, dst = net
     dyn = DynamicPageRankEngine(src, dst, n, backend=backend)
     pr0 = dyn.run_tol(1e-7, max_iters=500)[0]
-    before = [np.asarray(o) for o in dyn.operands]
+    before = [np.asarray(o) for o in jax.tree_util.tree_leaves(dyn.operands)]
     dang_before = np.asarray(dyn._dang)
     edges = _absent_pairs(src, dst, n, 3, seed=2)
     dyn.update(GraphDelta.inserts(*edges))
     pr2, _ = dyn.update(GraphDelta.deletes(*edges))
-    for a, b in zip(before, dyn.operands):
+    for a, b in zip(before, jax.tree_util.tree_leaves(dyn.operands)):
         np.testing.assert_array_equal(a, np.asarray(b))
     np.testing.assert_array_equal(dang_before, np.asarray(dyn._dang))
     assert _l1(pr0, pr2) <= 1e-5
@@ -286,31 +288,186 @@ def test_forced_strategy_validation(net):
     assert info.strategy == "warm" and info.n_inserted == 2
     assert dyn.n_edges == edges_before + 2
     assert _l1(pr, _scratch_ranks(src, dst, n, delta)) <= 1e-5
+    # BSR patches values inside existing blocks, so a forced push on an
+    # in-block delta (n=64 < one 128-block) now works instead of raising
     dyn_bsr = DynamicPageRankEngine(src, dst, n, backend="bsr")
     dyn_bsr.run_tol(1e-7, max_iters=500)
+    d2 = GraphDelta.inserts([u2], [v2])
+    pr, info = dyn_bsr.update(d2, strategy="push")
+    assert info.strategy == "push" and info.coerced_from is None
+    assert _l1(pr, _scratch_ranks(src, dst, n, d2)) <= 1e-5
+
+
+def test_bsr_structure_change_forces_rebuild(net):
+    """An insert landing in a block the BSR layout never materialized
+    cannot be patched in place: the auto policy escalates to a rebuild
+    and records the coercion (a genuine block-structure change, unlike
+    the in-block patches DYN_BACKENDS covers)."""
+    n, src, dst = net
+    dyn = DynamicPageRankEngine(src, dst, n, backend="bsr",
+                                bsr_block_size=8, rebuild_frac=1.0)
+    dyn.run_tol(1e-7, max_iters=500)
+    bs, nbc = 8, dyn._bsr_nbc
+    present = set(dyn._bsr_pairs.tolist())
+    u, v = next((u, v) for u in range(n) for v in range(u + 1, n)
+                if (v // bs) * nbc + u // bs not in present
+                and (u // bs) * nbc + v // bs not in present)
+    delta = GraphDelta.inserts([u], [v])
     with pytest.raises(ValueError, match="patchable"):
-        dyn_bsr.update(GraphDelta.inserts([u2], [v2]), strategy="push")
+        dyn.update(delta, strategy="push")       # forced patch must refuse
+    pr, info = dyn.update(delta)
+    assert info.overflow and info.strategy == "rebuild"
+    assert info.coerced_from == "push"
+    assert _l1(pr, _scratch_ranks(src, dst, n, delta)) <= 1e-5
 
 
-@pytest.mark.parametrize("backend", ["bsr"])
-def test_unpatchable_backend_falls_back_to_rebuild(net, backend):
+def test_overflow_coercion_is_recorded(net):
+    """Satellite: when the auto policy wants a push but the layout cannot
+    take the patch, the coercion surfaces in ``UpdateInfo.coerced_from``,
+    the ``update.coerced`` counter, and an ``update_coerced`` event."""
+    from repro.obs.registry import MetricsRegistry
+    n, src, dst = net
+    metrics = MetricsRegistry()
+    dyn = DynamicPageRankEngine(src, dst, n, backend="ell", slack=2,
+                                rebuild_frac=1.0, metrics=metrics)
+    dyn.run_tol(1e-7, max_iters=500)
+    deg = np.bincount(src, minlength=n)
+    w = int(np.argmin(np.where(deg > 0, deg, n)))
+    nbrs = [v for v in range(n) if v != w][:dyn._sell_k[0] + 2]
+    pr, info = dyn.update(GraphDelta.inserts([w] * len(nbrs), nbrs))
+    assert info.overflow and info.strategy == "rebuild"
+    assert info.coerced_from == "push"
+    assert metrics.counter("update.coerced").value == 1
+    evs = [e for e in metrics.events if e["kind"] == "update_coerced"]
+    assert len(evs) == 1
+    assert evs[0]["requested"] == "push" and evs[0]["ran"] == "rebuild"
+
+
+# --------------------------------------------------------------------------- #
+# sharded tiers: in-place patches + shard-local push on the mesh              #
+# --------------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", SHARDED)
+@pytest.mark.parametrize("strategy", ["auto", "push", "warm", "rebuild"])
+def test_sharded_update_matches_from_scratch(net, backend, strategy,
+                                             multi_device):
     n, src, dst = net
     dyn = DynamicPageRankEngine(src, dst, n, backend=backend)
     dyn.run_tol(1e-7, max_iters=500)
-    delta = GraphDelta.inserts(*_absent_pairs(src, dst, n, 2, seed=5))
-    pr, info = dyn.update(delta)
-    assert info.strategy == "rebuild"
+    iu, iv = _absent_pairs(src, dst, n, 3, seed=1)
+    delta = GraphDelta(iu, iv, np.asarray(src[:2]), np.asarray(dst[:2]))
+    pr, info = dyn.update(delta, strategy=strategy)
+    assert info.strategy == (strategy if strategy != "auto" else "push")
+    assert info.coerced_from is None
+    pr = np.asarray(pr)
+    assert (pr >= 0).all()
+    assert pr.sum() == pytest.approx(1.0, abs=1e-4)
     assert _l1(pr, _scratch_ranks(src, dst, n, delta)) <= 1e-5
 
 
-def test_dynamic_sharded_falls_back_to_rebuild(net, multi_device):
+@pytest.mark.parametrize("backend", SHARDED)
+def test_sharded_insert_then_delete_is_noop(net, backend, multi_device):
+    """A delta and its inverse restore the shard-local operand arrays
+    bit-exactly — the patch path writes the same values the builder
+    produced, on the same devices."""
+    import jax
     n, src, dst = net
-    dyn = DynamicPageRankEngine(src, dst, n, backend="ell_sharded")
+    dyn = DynamicPageRankEngine(src, dst, n, backend=backend)
+    pr0 = dyn.run_tol(1e-7, max_iters=500)[0]
+    before = [np.asarray(o) for o in jax.tree_util.tree_leaves(dyn.operands)]
+    dang_before = np.asarray(dyn._dang)
+    edges = _absent_pairs(src, dst, n, 3, seed=2)
+    dyn.update(GraphDelta.inserts(*edges))
+    pr2, _ = dyn.update(GraphDelta.deletes(*edges))
+    for a, b in zip(before, jax.tree_util.tree_leaves(dyn.operands)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+    np.testing.assert_array_equal(dang_before, np.asarray(dyn._dang))
+    assert _l1(pr0, pr2) <= 1e-5
+
+
+@pytest.mark.parametrize("backend", SHARDED)
+def test_sharded_patch_preserves_shardings(net, backend, multi_device):
+    """Patching must not silently replicate: the operands keep the exact
+    ``NamedSharding``s the layout was built with."""
+    n, src, dst = net
+    dyn = DynamicPageRankEngine(src, dst, n, backend=backend)
     dyn.run_tol(1e-7, max_iters=500)
+    import jax
+    specs_before = [o.sharding.spec
+                    for o in jax.tree_util.tree_leaves(dyn.operands)]
     delta = GraphDelta.inserts(*_absent_pairs(src, dst, n, 2, seed=6))
-    pr, info = dyn.update(delta)
-    assert info.strategy == "rebuild"
+    _, info = dyn.update(delta)
+    assert info.strategy == "push"
+    specs_after = [o.sharding.spec
+                   for o in jax.tree_util.tree_leaves(dyn.operands)]
+    assert specs_before == specs_after
+
+
+def test_sharded_capacity_overflow_escalates(net, multi_device):
+    """Burying a node past the ell_sharded row capacity (maxdeg + slack)
+    escalates to a rebuild with the coercion recorded — and the rebuilt
+    layout regrows its capacity."""
+    n, src, dst = net
+    dyn = DynamicPageRankEngine(src, dst, n, backend="ell_sharded",
+                                slack=2, rebuild_frac=1.0)
+    dyn.run_tol(1e-7, max_iters=500)
+    cap = int(dyn.operands[0].shape[1])
+    indeg = np.bincount(dst, minlength=n)
+    w = int(np.argmax(indeg))            # cap - indeg[w] is smallest here
+    have = set(dst[src == w].tolist()) | {w}
+    nbrs = [v for v in range(n) if v not in have][:cap - indeg[w] + 2]
+    pr, info = dyn.update(GraphDelta.inserts([w] * len(nbrs), nbrs))
+    assert info.overflow and info.strategy == "rebuild"
+    assert info.coerced_from == "push"
+    assert int(dyn.operands[0].shape[1]) > cap
+    delta = GraphDelta.inserts([w] * len(nbrs), nbrs)
     assert _l1(pr, _scratch_ranks(src, dst, n, delta)) <= 1e-5
+
+
+@pytest.mark.parametrize("backend", SHARDED)
+def test_sharded_auto_policy_matches_single_device(net, backend,
+                                                   multi_device):
+    """The auto policy must pick the same strategy sharded as it does on
+    the equivalent single-device layout — sharding changes where the work
+    runs, never whether a delta is patchable."""
+    n, src, dst = net
+    local = "dense" if backend == "dense_sharded" else "ell"
+    a = DynamicPageRankEngine(src, dst, n, backend=local)
+    b = DynamicPageRankEngine(src, dst, n, backend=backend)
+    (u1, u2), (v1, v2) = _absent_pairs(src, dst, n, 2, seed=8)
+    # no previous ranks: both warm-start
+    _, ia = a.update(GraphDelta.inserts([u1], [v1]))
+    _, ib = b.update(GraphDelta.inserts([u1], [v1]))
+    assert ia.strategy == ib.strategy == "warm"
+    a.run_tol(1e-7, max_iters=500)
+    b.run_tol(1e-7, max_iters=500)
+    # tiny delta with ranks: both push, neither coerced
+    _, ia = a.update(GraphDelta.inserts([u2], [v2]))
+    _, ib = b.update(GraphDelta.inserts([u2], [v2]))
+    assert ia.strategy == ib.strategy == "push"
+    assert ia.coerced_from is None and ib.coerced_from is None
+    # delta above rebuild_frac: both rebuild
+    rng = np.random.default_rng(9)
+    bu = rng.integers(0, n, size=a.n_edges // 4)
+    bv = (bu + rng.integers(1, n, size=bu.size)) % n
+    _, ia = a.update(GraphDelta.inserts(bu, bv))
+    _, ib = b.update(GraphDelta.inserts(bu, bv))
+    assert ia.strategy == ib.strategy == "rebuild"
+
+
+def test_sharded_stream_of_updates_tracks_scratch(net, multi_device):
+    """A stream of mixed deltas on the sharded tier: incremental ranks
+    never drift from the from-scratch oracle."""
+    n, src, dst = net
+    stream = EdgeStream(n, m_edges=3, seed=4, insert_per_step=4,
+                        delete_per_step=3)
+    s0, d0 = stream.base()
+    dyn = DynamicPageRankEngine(s0, d0, n, backend="ell_sharded")
+    dyn.run_tol(1e-7, max_iters=500)
+    cur = (s0, d0)
+    for _, delta in zip(range(4), stream):
+        pr, _ = dyn.update(delta)
+        cur = apply_delta(cur[0], cur[1], delta, n)
+    assert _l1(pr, _scratch_ranks(cur[0], cur[1], n)) <= 1e-5
 
 
 def test_dynamic_ell_ppr_matches_static(net):

@@ -108,6 +108,28 @@ def test_committed_bench_artifact_dynamic_claims_hold():
         "push", "warm", "rebuild"}
 
 
+def test_committed_bench_artifact_dynamic_sharded_claims_hold():
+    """The ``dynamic_sharded`` block (benchmarks/dynamic_bench.py
+    run_sharded) must keep the acceptance claims: on 8 virtual devices at
+    N=5000, a ≤64-edge delta on both sharded backends refreshes via
+    in-place patch + shard-local push ≥5x faster than the rebuild +
+    cold-solve fallback it replaces, within 1e-5 L1 of the from-scratch
+    oracle."""
+    with open(BENCH_PATH) as f:
+        dyn = json.load(f)["dynamic_sharded"]
+    assert dyn["n"] == 5000 and dyn["devices"] >= 8
+    assert dyn["delta_edges_directed"] <= 64
+    assert set(dyn["backends"]) == {"ell_sharded", "dense_sharded"}
+    assert dyn["claim"]["meets_5x"] is True
+    assert dyn["claim"]["l1_le_1e-5"] is True
+    assert dyn["claim"]["strategy_push"] is True
+    for name, b in dyn["backends"].items():
+        assert b["strategy"] == "push", name
+        assert b["speedup_update_vs_rebuild"] >= 5.0, name
+        assert b["l1_update_vs_scratch"] <= 1e-5, name
+        assert b["rebuild_cold_ms"] / b["update_ms"] >= 5.0, name
+
+
 def test_committed_bench_artifact_observability_claims_hold():
     """The ``observability`` block (benchmarks/observability_bench.py) must
     keep the acceptance claims: the solve-trace ring and the full metrics

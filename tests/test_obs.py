@@ -172,6 +172,28 @@ def test_trace_ring_wraparound_keeps_tail():
                                   short.info.trace.residuals[10:])
 
 
+def test_trace_ratios_pair_adjacent_samples_across_wraparound():
+    """Regression: for a solve longer than the ring (65+ iterations),
+    ``SolveTrace.ratios`` must pair only chronologically adjacent retained
+    residuals — never the artificial ring-buffer seam ``ring[-1]/ring[0]``
+    of the raw (unrotated) storage order."""
+    iters = TRACE_LEN + 6
+    res = 1.0 / (2.0 + np.arange(iters, dtype=np.float32))
+    ring = np.zeros(TRACE_LEN, np.float32)
+    for i in range(iters):                 # replay the device ring writes
+        ring[i % TRACE_LEN] = res[i]
+    import jax.numpy as jnp
+    tr = SolveTrace(jnp.asarray(ring), iters)
+    # retained = the last TRACE_LEN residuals, oldest first
+    np.testing.assert_array_equal(tr.residuals, res[iters - TRACE_LEN:])
+    got = tr.ratios
+    assert len(got) == TRACE_LEN - 1
+    want = res[iters - TRACE_LEN + 1:] / res[iters - TRACE_LEN:-1]
+    np.testing.assert_array_equal(got, want)
+    # every ratio reflects the decaying trajectory: no seam ratio > 1
+    assert (got < 1.0).all() and np.isfinite(got).all()
+
+
 @pytest.mark.parametrize("backend", ("dense", "ell", "pallas_dense"))
 def test_solve_info_iteration_parity_incl_push(backend):
     """Every refresh strategy reports its real iteration/sweep count and

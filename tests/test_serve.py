@@ -72,3 +72,15 @@ def test_eos_stops_generation():
     eng2 = ServeEngine(cfg, params, max_len=64, eos_id=eos)
     out_eos = eng2.generate(np.array([1, 2, 3], np.int32), 8)
     assert out_eos == out_free[:3]
+
+
+def test_drained_slots_release_kv_caches(engine):
+    """Once the request queue drains, a finished slot must drop its KV
+    cache (not just its Request): a stale cache pins device memory — and
+    would silently corrupt decoding if the slot were ever re-batched."""
+    eng, _, _ = engine
+    reqs = [Request(uid=i, prompt=np.arange(1, 5, dtype=np.int32),
+                    max_new_tokens=3) for i in range(5)]
+    done = eng.serve(reqs, n_slots=2)
+    assert all(r.done for r in done)
+    assert all(c is None for c in eng._caches)
