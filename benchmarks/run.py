@@ -20,8 +20,8 @@ def main() -> None:
     from benchmarks import (dynamic_bench, fig5_routing,
                             fig6a_matvec_latency, fig6b_pagerank_throughput,
                             kernel_bench, observability_bench,
-                            pagerank_engine_bench, resilience_bench,
-                            roofline, table1_design)
+                            pagerank_engine_bench, precision_bench,
+                            resilience_bench, roofline, table1_design)
 
     smoke = "--smoke" in sys.argv
     quick = "--quick" in sys.argv or smoke
@@ -32,6 +32,7 @@ def main() -> None:
         dynamic_sharded_kw = dict(n=256, reps=1, out_path=None)
         resilience_kw = dict(n=256, iters=10, reps=3, out_path=None)
         obs_kw = dict(n=256, iters=10, reps=3, out_path=None)
+        precision_kw = dict(n=256, iters=3, reps=1, out_path=None)
     elif quick:
         sizes, iters = [1000, 2000], 20
         # out_path=None: never overwrite the full-size JSON artifact with
@@ -41,6 +42,7 @@ def main() -> None:
         dynamic_sharded_kw = dict(n=1024, reps=1, out_path=None)
         resilience_kw = dict(n=1024, iters=50, reps=3, out_path=None)
         obs_kw = dict(n=1024, iters=50, reps=3, out_path=None)
+        precision_kw = dict(n=1024, iters=20, reps=3, out_path=None)
     else:
         sizes, iters = None, 100
         engine_kw = dict()
@@ -48,6 +50,7 @@ def main() -> None:
         dynamic_sharded_kw = dict()
         resilience_kw = dict()
         obs_kw = dict()
+        precision_kw = dict()
 
     benches = [
         fig5_routing.run,
@@ -61,6 +64,7 @@ def main() -> None:
         (lambda: dynamic_bench.run_sharded(**dynamic_sharded_kw)),
         (lambda: resilience_bench.run(**resilience_kw)),
         (lambda: observability_bench.run(**obs_kw)),
+        (lambda: precision_bench.run(**precision_kw)),
         roofline.run,
     ]
     print("name,us_per_call,derived")

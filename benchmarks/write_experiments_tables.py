@@ -1,10 +1,65 @@
-"""Regenerate the roofline appendices of EXPERIMENTS.md from the dry-run
-artifacts (baseline + optimized, pod + multipod)."""
+"""Regenerate the generated blocks of EXPERIMENTS.md: the reduced-
+precision accuracy-vs-speed table (from ``BENCH_pagerank_engine.json``'s
+``precision`` block) and the roofline appendices (from the dry-run
+artifacts, baseline + optimized, pod + multipod)."""
 from __future__ import annotations
 
+import json
+import os
 import re
 
+from benchmarks.pagerank_engine_bench import OUT_PATH
 from benchmarks.roofline import analyze_cell, load_records, render_table
+
+PRECISION_BEGIN = "<!-- precision-table:begin (generated) -->"
+PRECISION_END = "<!-- precision-table:end -->"
+
+
+def precision_table() -> str:
+    """Markdown accuracy-vs-speed table from the committed ``precision``
+    BENCH block (one row per layout x tier)."""
+    if not os.path.exists(OUT_PATH):
+        return "(no BENCH_pagerank_engine.json — run precision_bench)"
+    with open(OUT_PATH) as f:
+        prec = json.load(f).get("precision")
+    if not prec:
+        return "(no precision block — run benchmarks/precision_bench.py)"
+    lines = [
+        f"N={prec['n']} Barabasi-Albert graph, tol={prec['tol']:g}, "
+        f"device `{prec['device']}` "
+        f"(speed claimed: {prec['speed_claimed']}).",
+        "",
+        "| layout/tier | ms/iter | value bytes | total bytes | "
+        "iters@tol | top-100 overlap | Kendall-tau | L1 vs f32 |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for key, t in prec["tiers"].items():
+        lines.append(
+            f"| {key} | {t['ms_per_iter']:.3f} | {t['value_bytes']:,} "
+            f"| {t['total_bytes']:,} | {t['iters_to_tol']} "
+            f"| {t['top100_overlap']:.3f} | {t['kendall_tau_top100']:.3f} "
+            f"| {t['l1_vs_f32_fixed_point']:.2e} |")
+    dyn = prec["dynamic_bf16_sell"]
+    lines += [
+        "",
+        f"Dynamic bf16 SELL: {dyn['n_changed_directed']} directed edge "
+        f"changes refreshed via `{dyn['strategy']}` "
+        f"({dyn['push_sweeps']} sweeps, no rebuild), parity "
+        f"{dyn['parity_l1_vs_cold_same_precision']:.2e} L1 vs a fresh "
+        "same-precision cold solve (gate 1e-5).",
+    ]
+    return "\n".join(lines)
+
+
+def splice_precision(doc: str) -> str:
+    """Replace the marker-delimited precision table in-place; leave the
+    document untouched when the markers are absent."""
+    if PRECISION_BEGIN not in doc or PRECISION_END not in doc:
+        return doc
+    pre, rest = doc.split(PRECISION_BEGIN, 1)
+    _, post = rest.split(PRECISION_END, 1)
+    return (pre + PRECISION_BEGIN + "\n" + precision_table() + "\n"
+            + PRECISION_END + post)
 
 
 def section(dirname: str, mesh: str, title: str) -> str:
@@ -41,12 +96,13 @@ def main() -> None:
 
     with open("EXPERIMENTS.md") as f:
         doc = f.read()
+    doc = splice_precision(doc)
     doc = re.sub(r"## Appendix A —.*", "", doc, flags=re.S).rstrip()
     doc += "\n\n" + text
     with open("EXPERIMENTS.md", "w") as f:
         f.write(doc)
-    print("EXPERIMENTS.md appendices updated "
-          f"({text.count('|') // 10} table rows)")
+    print("EXPERIMENTS.md precision table + appendices updated "
+          f"({text.count('|') // 10} roofline rows)")
 
 
 if __name__ == "__main__":

@@ -46,7 +46,10 @@ def matvec(A: jax.Array, x: jax.Array, mesh: Mesh,
     """
 
     def kernel(a_blk, x_blk):
-        partial_y = a_blk @ x_blk                       # site multiplies
+        # A shards may be stored reduced-precision (bf16/f16/int8); the
+        # site multiply upcasts in-register (a trace-time no-op on f32)
+        # and the horizontal-bus reduction stays f32.
+        partial_y = a_blk.astype(jnp.float32) @ x_blk   # site multiplies
         return jax.lax.psum(partial_y, col_axis)        # horizontal bus
 
     return shard_map(

@@ -123,8 +123,11 @@ class ELLMatrix:
         return self.matmat(x[:, None])[:, 0]
 
     def matmat(self, X: jax.Array) -> jax.Array:
-        """Y = A @ X for (M, Q) X — one gather serves all Q columns."""
-        return jnp.sum(self.data[..., None] * X[self.indices], axis=1)
+        """Y = A @ X for (M, Q) X — one gather serves all Q columns.
+        ``data`` may be stored reduced-precision (bf16/f16); products and
+        the rowwise reduce run in f32 (upcast is a no-op on f32 data)."""
+        data = self.data.astype(jnp.float32)
+        return jnp.sum(data[..., None] * X[self.indices], axis=1)
 
     def todense(self) -> jax.Array:
         n, _ = self.shape
@@ -139,15 +142,21 @@ class BSRMatrix:
     """Block-sparse rows: for each block-row, a fixed budget of ``max_blocks``
     dense (bs x bs) blocks (zero-padded), with their block-column indices.
 
-    ``blocks``:    (n_block_rows, max_blocks, bs, bs) f32
+    ``blocks``:    (n_block_rows, max_blocks, bs, bs) f32 — or a reduced
+                   storage dtype (bf16/f16/int8); matvecs upcast per tile
+                   and accumulate in f32.
     ``block_cols``:(n_block_rows, max_blocks) i32 — padded entries point at
                    block-column 0 with an all-zero block (safe to accumulate).
+    ``row_scales``:(n_block_rows * bs,) f32 per-row dequantization scales
+                   for int8 blocks, folded into the accumulated row sums;
+                   ``None`` for float layouts.
     """
 
     blocks: jax.Array
     block_cols: jax.Array
     shape: tuple[int, int] = dataclasses.field(metadata=dict(static=True),
                                                default=(0, 0))
+    row_scales: jax.Array | None = None
 
     @staticmethod
     def from_dense(A: np.ndarray, bs: int = 128,
@@ -198,5 +207,9 @@ class BSRMatrix:
         Xp = jnp.zeros((m_pad, q), X.dtype).at[:self.shape[1]].set(X)
         xb = Xp.reshape(-1, bs, q)                    # (nb_c, bs, Q)
         gathered = xb[self.block_cols]                # (nb_r, mb, bs, Q)
-        y = jnp.einsum("rbij,rbjq->riq", self.blocks, gathered)
-        return y.reshape(nb_r * bs, q)[:self.shape[0]]
+        y = jnp.einsum("rbij,rbjq->riq", self.blocks.astype(jnp.float32),
+                       gathered.astype(jnp.float32))
+        y = y.reshape(nb_r * bs, q)
+        if self.row_scales is not None:
+            y = y * self.row_scales[:, None]
+        return y[:self.shape[0]]

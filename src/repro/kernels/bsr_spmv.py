@@ -33,8 +33,10 @@ def _kernel(cols_ref, blk_ref, x_ref, y_ref):
     def _init():
         y_ref[...] = jnp.zeros_like(y_ref)
 
-    # (bs, bs) @ (bs,) -> (bs,); padded blocks are all-zero => safe accumulate
-    y_ref[0, :] += jnp.dot(blk_ref[0, 0], x_ref[0, :],
+    # (bs, bs) @ (bs,) -> (bs,); padded blocks are all-zero => safe
+    # accumulate.  Blocks may be stored reduced-precision (bf16/f16/int8):
+    # upcast in-register, accumulate f32 (no-op on f32 blocks).
+    y_ref[0, :] += jnp.dot(blk_ref[0, 0].astype(jnp.float32), x_ref[0, :],
                            preferred_element_type=jnp.float32)
 
 

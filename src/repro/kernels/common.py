@@ -1,0 +1,19 @@
+"""Shared kernel-layer helpers (dependency-free leaf module).
+
+Importable from anywhere — the graph containers, the Pallas kernels and the
+engine all use :func:`upcast_f32` for the mixed-precision contract: operand
+tiles may be stored in a reduced dtype (bf16 / f16 / int8), but every
+multiply-accumulate happens in float32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def upcast_f32(x: jax.Array) -> jax.Array:
+    """Upcast a (possibly reduced-precision) operand to float32 for
+    accumulation.  On a float32 input this is a trace-time no-op —
+    ``astype`` short-circuits on a matching dtype — so the float32 tiers
+    keep emitting bit-identical programs through the shared code paths."""
+    return x.astype(jnp.float32)

@@ -16,6 +16,7 @@ import jax.numpy as jnp
 
 from repro.graph.sparse import BSRMatrix
 from repro.kernels.bsr_spmv import bsr_spmv
+from repro.kernels.common import upcast_f32
 from repro.kernels.pagerank_step import pagerank_step
 from repro.kernels.streaming_matvec import streaming_matvec
 
@@ -42,9 +43,14 @@ def gemv_batched(W: jax.Array, X: jax.Array, **kw) -> jax.Array:
 
 
 def spmv(bsr: BSRMatrix, x: jax.Array, **kw) -> jax.Array:
-    """y = H_bsr @ x, trimmed to the logical (unpadded) length."""
+    """y = H_bsr @ x, trimmed to the logical (unpadded) length.  Reduced-
+    precision blocks (bf16/f16/int8) are upcast tile-by-tile inside the
+    kernel; an int8 layout's per-row scales fold into the accumulated f32
+    row sums here — never into the stored operand."""
     kw.setdefault("interpret", default_interpret())
-    y = bsr_spmv(bsr.blocks, bsr.block_cols, x, **kw)
+    y = bsr_spmv(bsr.blocks, bsr.block_cols, upcast_f32(x), **kw)
+    if bsr.row_scales is not None:
+        y = y * bsr.row_scales
     return y[:bsr.shape[0]]
 
 

@@ -39,8 +39,10 @@ def _kernel(t_ref, h_ref, x_ref, y_ref, *, d: float, m_steps: int):
     def _init():
         y_ref[...] = jnp.zeros_like(y_ref)
 
+    # H tiles may be stored reduced-precision; upcast in-register (a
+    # trace-time no-op on f32) and accumulate in f32.
     y_ref[...] += jax.lax.dot_general(
-        x_ref[...], h_ref[...],
+        x_ref[...], h_ref[...].astype(jnp.float32),
         dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)
 
@@ -81,8 +83,15 @@ def pagerank_step(H: jax.Array, pr: jax.Array, t: jax.Array, *,
     return out[0, :N]
 
 
-def _fused_kernel(t_ref, h_ref, x_ref, dang_ref, y_ref, leak_ref, *,
-                  d: float, m_steps: int):
+def _fused_kernel(t_ref, h_ref, x_ref, dang_ref, *rest,
+                  d: float, m_steps: int, has_scales: bool):
+    # ``rest`` is (s_ref, y_ref, leak_ref) for int8 layouts carrying a
+    # per-row dequantization scale, (y_ref, leak_ref) otherwise — the
+    # two variants trace to different programs, selected statically.
+    if has_scales:
+        s_ref, y_ref, leak_ref = rest
+    else:
+        y_ref, leak_ref = rest
     i = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -94,14 +103,21 @@ def _fused_kernel(t_ref, h_ref, x_ref, dang_ref, y_ref, leak_ref, *,
     def _init():
         y_ref[...] = jnp.zeros_like(y_ref)
 
+    # H tiles may be stored reduced-precision (bf16/f16/int8); upcast
+    # in-register (a trace-time no-op on f32) and accumulate in f32.
     y_ref[...] += jax.lax.dot_general(
-        x_ref[...], h_ref[...],
+        x_ref[...], h_ref[...].astype(jnp.float32),
         dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32)
 
     @pl.when(j == m_steps - 1)
     def _epilogue():
-        y = jnp.float32(d) * y_ref[...] + t_ref[0]
+        acc = y_ref[...]
+        if has_scales:
+            # int8 dequant: fold the per-row scale into the accumulated
+            # f32 row sums, in the same drain epilogue as the affine term.
+            acc = s_ref[...] * acc
+        y = jnp.float32(d) * acc + t_ref[0]
         y_ref[...] = y
         # dangling-leak reduction over the *new* rank block, while the
         # block is still resident — the second pass ops.pagerank_iteration
@@ -112,7 +128,8 @@ def _fused_kernel(t_ref, h_ref, x_ref, dang_ref, y_ref, leak_ref, *,
 @functools.partial(jax.jit,
                    static_argnames=("d", "block_n", "block_m", "interpret"))
 def pagerank_step_fused(Hp: jax.Array, xp: jax.Array, dangp: jax.Array,
-                        t: jax.Array, *, d: float = 0.85,
+                        t: jax.Array, scales: jax.Array | None = None, *,
+                        d: float = 0.85,
                         block_n: int = 256, block_m: int = 256,
                         interpret: bool = True
                         ) -> tuple[jax.Array, jax.Array]:
@@ -120,40 +137,53 @@ def pagerank_step_fused(Hp: jax.Array, xp: jax.Array, dangp: jax.Array,
 
     ``Hp``: (Np, Mp) transition matrix, both axes already multiples of the
     block sizes (zero padding).  ``xp``: (1, Mp) rank vector, ``dangp``:
-    (1, Np) dangling mask (zero in the padded tail).  Returns
-    ``(yp, leak)`` where ``yp = d * (Hp @ xp) + t`` (still padded — the
-    padded tail holds ``t``, harmless because Hp's padded columns and
-    ``dangp``'s padded tail are zero) and ``leak = sum(yp * dangp)``, the
-    scalar the caller folds into the next iteration's ``t``.
+    (1, Np) dangling mask (zero in the padded tail).  ``Hp`` may be stored
+    in a reduced dtype (bf16/f16/int8) — tiles are upcast in-register and
+    accumulated in f32.  ``scales``: optional (1, Np) f32 per-row
+    dequantization scales for int8 layouts, applied in the drain epilogue;
+    ``None`` traces the exact pre-existing program (bit-identical f32
+    path).  Returns ``(yp, leak)`` where ``yp = d * (Hp @ xp) + t`` (still
+    padded — the padded tail holds ``t``, harmless because Hp's padded
+    columns and ``dangp``'s padded tail are zero) and
+    ``leak = sum(yp * dangp)``, the scalar the caller folds into the next
+    iteration's ``t``.
     """
     Np, Mp = Hp.shape
     bn = min(block_n, Np)
     bm = min(block_m, Mp)
     assert Np % bn == 0 and Mp % bm == 0, "inputs must be pre-padded"
     grid = (Np // bn, Mp // bm)
+    has_scales = scales is not None
+
+    in_specs = [
+        pl.BlockSpec((bn, bm), lambda i, j, t: (i, j)),
+        pl.BlockSpec((1, bm), lambda i, j, t: (0, j)),
+        pl.BlockSpec((1, bn), lambda i, j, t: (0, i)),
+    ]
+    operands = [Hp, xp, dangp]
+    if has_scales:
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, t: (0, i)))
+        operands.append(scales)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((bn, bm), lambda i, j, t: (i, j)),
-            pl.BlockSpec((1, bm), lambda i, j, t: (0, j)),
-            pl.BlockSpec((1, bn), lambda i, j, t: (0, i)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((1, bn), lambda i, j, t: (0, i)),
             pl.BlockSpec((1, 1), lambda i, j, t: (0, 0)),
         ],
     )
     yp, leak = pl.pallas_call(
-        functools.partial(_fused_kernel, d=d, m_steps=grid[1]),
+        functools.partial(_fused_kernel, d=d, m_steps=grid[1],
+                          has_scales=has_scales),
         grid_spec=grid_spec,
         out_shape=[
             jax.ShapeDtypeStruct((1, Np), jnp.float32),
             jax.ShapeDtypeStruct((1, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(jnp.asarray(t, jnp.float32).reshape(1), Hp, xp, dangp)
+    )(jnp.asarray(t, jnp.float32).reshape(1), *operands)
     return yp, leak[0, 0]
 
 

@@ -2,17 +2,21 @@
 
 Each function is the mathematical definition the kernels must match to
 ``assert_allclose`` across the shape/dtype sweeps in
-``tests/test_kernels.py``.
+``tests/test_kernels.py``.  Mixed-dtype inputs (bf16 / f16 / int8 operand
+tiles) go through :func:`repro.kernels.common.upcast_f32` — the same
+upcast-then-accumulate-in-f32 contract the kernels implement.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import upcast_f32
+
 
 def streaming_matvec_ref(W: jax.Array, X: jax.Array) -> jax.Array:
     """Y = X @ W^T, f32 accumulation."""
-    return jnp.dot(X.astype(jnp.float32), W.astype(jnp.float32).T)
+    return jnp.dot(upcast_f32(X), upcast_f32(W).T)
 
 
 def bsr_spmv_ref(blocks: jax.Array, block_cols: jax.Array,
@@ -24,11 +28,11 @@ def bsr_spmv_ref(blocks: jax.Array, block_cols: jax.Array,
         xp = jnp.pad(x, (0, bs - x.shape[0] % bs))
     xb = xp.reshape(-1, bs)
     gathered = xb[block_cols]                    # (nb_r, mb, bs)
-    y = jnp.einsum("rbij,rbj->ri", blocks.astype(jnp.float32),
-                   gathered.astype(jnp.float32))
+    y = jnp.einsum("rbij,rbj->ri", upcast_f32(blocks),
+                   upcast_f32(gathered))
     return y.reshape(nb_r * bs)
 
 
 def pagerank_step_ref(H: jax.Array, pr: jax.Array, t: jax.Array,
                       d: float = 0.85) -> jax.Array:
-    return d * jnp.dot(H.astype(jnp.float32), pr.astype(jnp.float32)) + t
+    return d * jnp.dot(upcast_f32(H), upcast_f32(pr)) + t

@@ -33,9 +33,11 @@ def _kernel(x_ref, w_ref, y_ref, *, n_steps_m: int):
     def _init():
         y_ref[...] = jnp.zeros_like(y_ref)
 
-    # (B, bm) @ (bn, bm)^T -> (B, bn), f32 accumulation on the MXU.
+    # (B, bm) @ (bn, bm)^T -> (B, bn), f32 accumulation on the MXU.  The
+    # weight tile may arrive in a reduced storage dtype (bf16/f16/int8);
+    # it is upcast in-register — a trace-time no-op on f32 tiles.
     y_ref[...] += jax.lax.dot_general(
-        x_ref[...], w_ref[...],
+        x_ref[...], w_ref[...].astype(jnp.float32),
         dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32).astype(y_ref.dtype)
 

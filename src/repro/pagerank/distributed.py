@@ -66,15 +66,22 @@ def _real_mask(n: int, n_true: int, dtype=jnp.float32) -> jax.Array:
 # --------------------------------------------------------------------------- #
 # dense fabric schedule (2-D mesh)                                            #
 # --------------------------------------------------------------------------- #
-def _dense_iter(H, pr, dangling, mesh, row_axis, col_axis, d, nt):
+def _dense_iter(H, pr, dangling, mesh, row_axis, col_axis, d, nt,
+                scales=None):
     """The canonical fabric-schedule iteration, shared by the fixed and
     tolerance-terminated variants so the arithmetic (and hence the float
     result) is defined in one place.  The leak term is the fabric analogue
     of the adder-column epilogue; ``dangling`` is a proper argument now —
     the seed closed over a name assigned *after* the closure def (it
     worked only because tracing happened later, and no caller ever
-    exercised the dangling branch; tests/test_engine_sharded.py does)."""
+    exercised the dangling branch; tests/test_engine_sharded.py does).
+    ``H`` may be stored reduced-precision (the fabric matvec upcasts each
+    shard tile in-register and accumulates in f32); ``scales`` is the
+    optional replicated per-row f32 dequantization vector of an int8
+    layout, folded into the accumulated row sums here."""
     y = fm.matvec(H, pr, mesh, row_axis, col_axis)
+    if scales is not None:
+        y = y * scales
     leak = 0.0 if dangling is None else jnp.sum(pr * dangling) / nt
     y = d * (y + leak) + (1.0 - d) / nt
     return fm.matvec_iterated_reshard(y, mesh, row_axis, col_axis)
@@ -84,23 +91,26 @@ def pagerank_distributed(H: jax.Array, mesh: Mesh, n_iters: int = 100,
                          d: float = 0.85, row_axis: str = "data",
                          col_axis: str = "model",
                          dangling: jax.Array | None = None,
-                         n_true: int | None = None) -> jax.Array:
+                         n_true: int | None = None,
+                         scales: jax.Array | None = None) -> jax.Array:
     """Dense fabric-schedule PageRank.  H: (N, N) sharded P(row, col);
     returns PR (N,) sharded P(col) (vertical-bus layout).
 
     With ``dangling`` given, H must be the *unfixed* transition matrix and
     the leak is applied as an explicit scalar (the fabric analogue of the
     adder-column epilogue); with ``dangling=None`` H must be dangling-fixed.
+    ``H`` may be stored reduced-precision; the iterate is always f32, and
+    ``scales`` carries an int8 layout's per-row dequantization vector.
     """
     n = H.shape[0]
     nt = int(n if n_true is None else n_true)
 
     def one_iter(pr, _):
         return _dense_iter(H, pr, dangling, mesh, row_axis, col_axis,
-                           d, nt), None
+                           d, nt, scales), None
 
     pr0 = jax.lax.with_sharding_constraint(
-        _pr0(n, nt, H.dtype), NamedSharding(mesh, P(col_axis)))
+        _pr0(n, nt), NamedSharding(mesh, P(col_axis)))
     pr, _ = jax.lax.scan(one_iter, pr0, None, length=n_iters)
     return pr
 
@@ -111,7 +121,8 @@ def pagerank_distributed_tol(H: jax.Array, mesh: Mesh, tol: float = 1e-6,
                              dangling: jax.Array | None = None,
                              n_true: int | None = None,
                              x0: jax.Array | None = None,
-                             watchdog: bool = True, trace: bool = False):
+                             watchdog: bool = True, trace: bool = False,
+                             scales: jax.Array | None = None):
     """Tolerance-terminated fabric-schedule PageRank; the L1 residual is a
     replicated scalar, so every device exits the ``while_loop`` on the same
     iteration — and so the convergence watchdog's abort decision (NaN/Inf
@@ -124,28 +135,35 @@ def pagerank_distributed_tol(H: jax.Array, mesh: Mesh, tol: float = 1e-6,
     n = H.shape[0]
     nt = int(n if n_true is None else n_true)
     mask = jax.lax.with_sharding_constraint(
-        _real_mask(n, nt, H.dtype), NamedSharding(mesh, P(col_axis)))
+        _real_mask(n, nt), NamedSharding(mesh, P(col_axis)))
 
     def step(pr):
-        new = _dense_iter(H, pr, dangling, mesh, row_axis, col_axis, d, nt)
+        new = _dense_iter(H, pr, dangling, mesh, row_axis, col_axis, d, nt,
+                          scales)
         return new, jnp.sum(jnp.abs(new - pr) * mask)
 
     pr0 = jax.lax.with_sharding_constraint(
-        _pr0(n, nt, H.dtype) if x0 is None else x0.astype(H.dtype),
+        _pr0(n, nt) if x0 is None else x0.astype(jnp.float32),
         NamedSharding(mesh, P(col_axis)))
 
     return instrumented_tol_loop(step, pr0, tol=tol, max_iters=max_iters,
-                                 watchdog=watchdog, trace=trace,
-                                 dtype=H.dtype)
+                                 watchdog=watchdog, trace=trace)
 
 
 # --------------------------------------------------------------------------- #
 # sparse row-sharded schedule (flattened mesh)                                #
 # --------------------------------------------------------------------------- #
-def _ell_block_iter(data_blk, idx_blk, pr, dang_full, axes, d, nt):
+def _ell_block_iter(data_blk, idx_blk, pr, dang_full, axes, d, nt,
+                    scale_blk=None):
     """Canonical row-sharded ELL iteration (local rows -> leak -> damp ->
-    tiled all_gather), shared by the fixed and tolerance variants."""
-    y_blk = jnp.sum(data_blk * pr[idx_blk], axis=1)
+    tiled all_gather), shared by the fixed and tolerance variants.
+    ``data_blk`` may be stored reduced-precision — products and the rowwise
+    reduce run in f32 (a no-op upcast on f32 data); ``scale_blk`` is the
+    optional row-sharded per-row f32 dequantization vector of an int8
+    layout, folded into the local row sums before damping."""
+    y_blk = jnp.sum(data_blk.astype(jnp.float32) * pr[idx_blk], axis=1)
+    if scale_blk is not None:
+        y_blk = y_blk * scale_blk
     leak = jnp.sum(pr * dang_full) / nt
     y_blk = d * (y_blk + leak) + (1.0 - d) / nt
     return jax.lax.all_gather(y_blk, axes, tiled=True)
@@ -156,27 +174,38 @@ def pagerank_distributed_sparse(ell_data: jax.Array, ell_idx: jax.Array,
                                 d: float = 0.85,
                                 dangling: jax.Array | None = None,
                                 axes: tuple[str, ...] = ("data", "model"),
-                                n_true: int | None = None) -> jax.Array:
+                                n_true: int | None = None,
+                                scales: jax.Array | None = None
+                                ) -> jax.Array:
     """Row-sharded ELL PageRank.  ``ell_data``/``ell_idx``: (N, K) sharded
     over rows on the flattened mesh axes; PR replicated.  One tiled
-    ``all_gather`` of the fresh row-shards per iteration."""
+    ``all_gather`` of the fresh row-shards per iteration.  ``scales``: an
+    int8 layout's (N,) per-row dequantization vector, row-sharded like the
+    ELL operands."""
     n = ell_data.shape[0]
     nt = int(n if n_true is None else n_true)
     dang = (jnp.zeros((n,), jnp.float32) if dangling is None
             else jnp.asarray(dangling, jnp.float32))
 
-    def kernel(data_blk, idx_blk, dang_full):
+    def kernel(data_blk, idx_blk, dang_full, *rest):
+        scale_blk = rest[0] if rest else None
+
         def one_iter(pr, _):
             return _ell_block_iter(data_blk, idx_blk, pr, dang_full,
-                                   axes, d, nt), None
+                                   axes, d, nt, scale_blk), None
 
         pr, _ = jax.lax.scan(one_iter, _pr0(n, nt), None, length=n_iters)
         return pr
 
+    in_specs = (P(axes), P(axes), P())
+    operands = (ell_data, ell_idx, dang)
+    if scales is not None:
+        in_specs += (P(axes),)
+        operands += (scales,)
     return shard_map(
         kernel, mesh,
-        in_specs=(P(axes), P(axes), P()),
-        out_specs=P())(ell_data, ell_idx, dang)
+        in_specs=in_specs,
+        out_specs=P())(*operands)
 
 
 def pagerank_distributed_sparse_tol(ell_data: jax.Array, ell_idx: jax.Array,
@@ -187,7 +216,8 @@ def pagerank_distributed_sparse_tol(ell_data: jax.Array, ell_idx: jax.Array,
                                     n_true: int | None = None,
                                     x0: jax.Array | None = None,
                                     watchdog: bool = True,
-                                    trace: bool = False):
+                                    trace: bool = False,
+                                    scales: jax.Array | None = None):
     """Tolerance-terminated row-sharded ELL PageRank.  After each
     iteration's ``all_gather`` every device holds the full fresh vector, so
     the residual (and the exit decision — including the convergence
@@ -206,12 +236,13 @@ def pagerank_distributed_sparse_tol(ell_data: jax.Array, ell_idx: jax.Array,
             else jnp.asarray(dangling, jnp.float32))
     pr0 = _pr0(n, nt) if x0 is None else jnp.asarray(x0, jnp.float32)
 
-    def kernel(data_blk, idx_blk, dang_full, pr0_full):
+    def kernel(data_blk, idx_blk, dang_full, pr0_full, *rest):
+        scale_blk = rest[0] if rest else None
         mask = _real_mask(n, nt)
 
         def step(pr):
             new = _ell_block_iter(data_blk, idx_blk, pr, dang_full,
-                                  axes, d, nt)
+                                  axes, d, nt, scale_blk)
             return new, jnp.sum(jnp.abs(new - pr) * mask)
 
         pr, iters, res, grow, ring = instrumented_tol_loop(
@@ -220,11 +251,15 @@ def pagerank_distributed_sparse_tol(ell_data: jax.Array, ell_idx: jax.Array,
         return ((pr, iters, res, grow, ring) if trace
                 else (pr, iters, res, grow))
 
+    in_specs = (P(axes), P(axes), P(), P())
+    operands = (ell_data, ell_idx, dang, pr0)
+    if scales is not None:
+        in_specs += (P(axes),)
+        operands += (scales,)
     out = shard_map(
         kernel, mesh,
-        in_specs=(P(axes), P(axes), P(), P()),
-        out_specs=(P(),) * (5 if trace else 4))(ell_data, ell_idx, dang,
-                                                pr0)
+        in_specs=in_specs,
+        out_specs=(P(),) * (5 if trace else 4))(*operands)
     return out if trace else (*out, None)
 
 
@@ -237,7 +272,8 @@ def push_distributed_tol(H: jax.Array, mesh: Mesh, x0: jax.Array,
                          col_axis: str = "model",
                          dangling: jax.Array | None = None,
                          n_true: int | None = None,
-                         watchdog: bool = True, trace: bool = False):
+                         watchdog: bool = True, trace: bool = False,
+                         scales: jax.Array | None = None):
     """Frontier push on the dense fabric layout.  Each sweep pushes every
     entry of the frontier mask ``|r| >= tol/n`` into the iterate — a purely
     elementwise update on the P(col)-sharded vector, so the only
@@ -252,11 +288,12 @@ def push_distributed_tol(H: jax.Array, mesh: Mesh, x0: jax.Array,
     n = H.shape[0]
     nt = int(n if n_true is None else n_true)
     spec = NamedSharding(mesh, P(col_axis))
-    mask = jax.lax.with_sharding_constraint(_real_mask(n, nt, H.dtype), spec)
-    thresh = jnp.asarray(tol, H.dtype) / nt
+    mask = jax.lax.with_sharding_constraint(_real_mask(n, nt), spec)
+    thresh = jnp.float32(tol) / nt
 
     def residual(x):
-        new = _dense_iter(H, x, dangling, mesh, row_axis, col_axis, d, nt)
+        new = _dense_iter(H, x, dangling, mesh, row_axis, col_axis, d, nt,
+                          scales)
         return (new - x) * mask
 
     def step(state):
@@ -265,11 +302,11 @@ def push_distributed_tol(H: jax.Array, mesh: Mesh, x0: jax.Array,
         r = residual(x)
         return (x, r), jnp.sum(jnp.abs(r))
 
-    x0 = jax.lax.with_sharding_constraint(x0.astype(H.dtype), spec)
+    x0 = jax.lax.with_sharding_constraint(x0.astype(jnp.float32), spec)
     r0 = residual(x0)
     (x, _), sweeps, res, grow, ring = instrumented_tol_loop(
         step, (x0, r0), tol=tol, max_iters=max_pushes, watchdog=watchdog,
-        trace=trace, res0=jnp.sum(jnp.abs(r0)), dtype=H.dtype)
+        trace=trace, res0=jnp.sum(jnp.abs(r0)))
     return x, sweeps, res, grow, ring
 
 
@@ -279,7 +316,8 @@ def push_distributed_sparse_tol(ell_data: jax.Array, ell_idx: jax.Array,
                                 dangling: jax.Array | None = None,
                                 axes: tuple[str, ...] = ("data", "model"),
                                 n_true: int | None = None,
-                                watchdog: bool = True, trace: bool = False):
+                                watchdog: bool = True, trace: bool = False,
+                                scales: jax.Array | None = None):
     """Frontier push on the row-sharded ELL layout, as a ``shard_map``
     kernel mirroring :func:`pagerank_distributed_sparse_tol`: each device
     sweeps its own row block and the per-sweep ``all_gather`` re-assembles
@@ -295,13 +333,14 @@ def push_distributed_sparse_tol(ell_data: jax.Array, ell_idx: jax.Array,
             else jnp.asarray(dangling, jnp.float32))
     x0 = jnp.asarray(x0, jnp.float32)
 
-    def kernel(data_blk, idx_blk, dang_full, x0_full):
+    def kernel(data_blk, idx_blk, dang_full, x0_full, *rest):
+        scale_blk = rest[0] if rest else None
         mask = _real_mask(n, nt)
         thresh = jnp.float32(tol) / nt
 
         def residual(x):
             new = _ell_block_iter(data_blk, idx_blk, x, dang_full, axes,
-                                  d, nt)
+                                  d, nt, scale_blk)
             return (new - x) * mask
 
         def step(state):
@@ -317,10 +356,15 @@ def push_distributed_sparse_tol(ell_data: jax.Array, ell_idx: jax.Array,
         return ((x, sweeps, res, grow, ring) if trace
                 else (x, sweeps, res, grow))
 
+    in_specs = (P(axes), P(axes), P(), P())
+    operands = (ell_data, ell_idx, dang, x0)
+    if scales is not None:
+        in_specs += (P(axes),)
+        operands += (scales,)
     out = shard_map(
         kernel, mesh,
-        in_specs=(P(axes), P(axes), P(), P()),
-        out_specs=(P(),) * (5 if trace else 4))(ell_data, ell_idx, dang, x0)
+        in_specs=in_specs,
+        out_specs=(P(),) * (5 if trace else 4))(*operands)
     return out if trace else (*out, None)
 
 
@@ -329,8 +373,8 @@ def push_distributed_sparse_tol(ell_data: jax.Array, ell_idx: jax.Array,
 # --------------------------------------------------------------------------- #
 def ppr_distributed_dense(H: jax.Array, dang: jax.Array, V: jax.Array,
                           mesh: Mesh, n_iters: int = 100, d: float = 0.85,
-                          row_axis: str = "data",
-                          col_axis: str = "model") -> jax.Array:
+                          row_axis: str = "data", col_axis: str = "model",
+                          scales: jax.Array | None = None) -> jax.Array:
     """Batched PPR with the (N, Q) rank matrix sharded over the query axis.
 
     H is the *unfixed* transition matrix (the PPR leak teleports to V, not
@@ -341,10 +385,14 @@ def ppr_distributed_dense(H: jax.Array, dang: jax.Array, V: jax.Array,
     (N, Q) rank matrix sharded like V.
     """
 
-    def kernel(h_blk, dang_full, v_blk):
+    def kernel(h_blk, dang_full, v_blk, *rest):
+        scale_blk = rest[0] if rest else None
+
         def mv(PR):                     # local row-block MV, re-assembled
-            return jax.lax.all_gather(h_blk @ PR, row_axis, axis=0,
-                                      tiled=True)
+            y_blk = h_blk.astype(jnp.float32) @ PR
+            if scale_blk is not None:
+                y_blk = y_blk * scale_blk[:, None]
+            return jax.lax.all_gather(y_blk, row_axis, axis=0, tiled=True)
 
         def one_iter(pr_blk, _):
             return ppr_step_batched(mv, pr_blk, v_blk, dang_full, d), None
@@ -352,26 +400,37 @@ def ppr_distributed_dense(H: jax.Array, dang: jax.Array, V: jax.Array,
         pr, _ = jax.lax.scan(one_iter, v_blk, None, length=n_iters)
         return pr
 
+    in_specs = (P(row_axis, None), P(), P(None, col_axis))
+    operands = (H, dang, V)
+    if scales is not None:
+        in_specs += (P(row_axis),)
+        operands += (scales,)
     return shard_map(
         kernel, mesh,
-        in_specs=(P(row_axis, None), P(), P(None, col_axis)),
-        out_specs=P(None, col_axis))(H, dang, V)
+        in_specs=in_specs,
+        out_specs=P(None, col_axis))(*operands)
 
 
 def ppr_distributed_sparse(ell_data: jax.Array, ell_idx: jax.Array,
                            dang: jax.Array, V: jax.Array, mesh: Mesh,
                            n_iters: int = 100, d: float = 0.85,
-                           axes: tuple[str, ...] = ("data", "model")
-                           ) -> jax.Array:
+                           axes: tuple[str, ...] = ("data", "model"),
+                           scales: jax.Array | None = None) -> jax.Array:
     """Batched PPR over replicated ELL operands, (N, Q) sharded over the
     query axis on the flattened mesh — each device propagates its own query
     block end-to-end with zero per-iteration collectives (the ELL operands
     of a sparse interactome are small enough to replicate; the dense-H
     variant above is the one that shards the sweep itself)."""
 
-    def kernel(data_full, idx_full, dang_full, v_blk):
+    def kernel(data_full, idx_full, dang_full, v_blk, *rest):
+        scale_full = rest[0] if rest else None
+
         def mv(PR):                     # ELL matmat, fully local
-            return jnp.sum(data_full[..., None] * PR[idx_full], axis=1)
+            y = jnp.sum(data_full.astype(jnp.float32)[..., None]
+                        * PR[idx_full], axis=1)
+            if scale_full is not None:
+                y = y * scale_full[:, None]
+            return y
 
         def one_iter(pr_blk, _):
             return ppr_step_batched(mv, pr_blk, v_blk, dang_full, d), None
@@ -379,10 +438,15 @@ def ppr_distributed_sparse(ell_data: jax.Array, ell_idx: jax.Array,
         pr, _ = jax.lax.scan(one_iter, v_blk, None, length=n_iters)
         return pr
 
+    in_specs = (P(), P(), P(), P(None, axes))
+    operands = (ell_data, ell_idx, dang, V)
+    if scales is not None:
+        in_specs += (P(),)
+        operands += (scales,)
     return shard_map(
         kernel, mesh,
-        in_specs=(P(), P(), P(), P(None, axes)),
-        out_specs=P(None, axes))(ell_data, ell_idx, dang, V)
+        in_specs=in_specs,
+        out_specs=P(None, axes))(*operands)
 
 
 def make_sharded_inputs_dense(H, mesh: Mesh, row_axis="data",

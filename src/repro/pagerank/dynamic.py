@@ -86,6 +86,7 @@ from repro.kernels.streaming_matvec import streaming_matvec
 from repro.obs.trace import SolveTrace, instrumented_tol_loop
 from repro.pagerank import distributed as dist
 from repro.pagerank.engine import PageRankEngine, _dedupe_edges, _matvec
+from repro.pagerank.precision import quantize_int8, rowmax_scales
 from repro.pagerank.resilience import EngineSnapshot, make_solve_info
 
 __all__ = ["DynamicPageRankEngine", "UpdateInfo", "PATCHABLE_BACKENDS"]
@@ -95,6 +96,12 @@ __all__ = ["DynamicPageRankEngine", "UpdateInfo", "PATCHABLE_BACKENDS"]
 # NamedShardings; BSR patches values inside the prepared block structure).
 # Capacity overflow — an ELL/SELL row outgrowing its slack, a BSR insert
 # needing a block the layout doesn't hold — still escalates to rebuild.
+# Reduced-precision tiers patch too: recomputed rows/columns are cast to
+# the layout's storage dtype before the scatter, never widening the
+# prepared arrays.  int8 is the exception — a changed row invalidates its
+# per-row quantization scale, so a value patch alone would dequantize the
+# row's untouched entries wrong; every int8 delta coerces to rebuild
+# (recorded on ``coerced_from``, same as capacity overflow).
 PATCHABLE_BACKENDS = ("dense", "ell", "pallas_dense", "bsr",
                       "dense_sharded", "ell_sharded")
 
@@ -262,9 +269,13 @@ def _push_loop(Ab, x0, tol, n, max_pushes, trace=False):
 @partial(jax.jit, static_argnames=("backend", "n", "max_pushes", "trace"))
 def _push_tol(operands, dang, d, tol, x0, *, backend: str, n: int,
               max_pushes: int, trace: bool = False):
-    if backend == "dense":
-        # the dangling-FIXED dense operand: the uniform leak columns are
-        # already folded in, so A·x is just d·H·x
+    if (backend == "dense" and len(operands) == 1
+            and operands[0].dtype == jnp.float32):
+        # the f32 dense operand is dangling-FIXED: the uniform leak columns
+        # are already folded in, so A·x is just d·H·x.  Reduced-precision
+        # dense tiers store H *unfixed* (and int8 appends a scale operand),
+        # so they take the generic explicit-leak branch below — the arity/
+        # dtype test is static under jit, so the f32 program is unchanged.
         def Ab(x):
             return d * (operands[0] @ x) + (1.0 - d) / n
     else:
@@ -388,6 +399,8 @@ class DynamicPageRankEngine(PageRankEngine):
         self._axes = ()
         self._n_pad = n
         self._ppr_operands = None
+        self._scales = None
+        self._ppr_scales = None
         self._mv_backend = "sell"     # engine._matvec's tag for this layout
         csr = tr.build_transition_csr(src, dst, n)
         counts = np.diff(np.asarray(csr.indptr))
@@ -426,11 +439,26 @@ class DynamicPageRankEngine(PageRankEngine):
         r_h = self._sell_pos[rows[~in_low]]
         dh[r_h, pos[~in_low]] = vals[~in_low]
         ih[r_h, pos[~in_low]] = cols[~in_low]
-        self._operands = (jnp.asarray(dl), jnp.asarray(il),
-                          jnp.asarray(dh), jnp.asarray(ih),
-                          jnp.asarray(inv, jnp.int32))
+        if self.precision == "int8":
+            # per-row scales per tier, appended to the operand tuple (the
+            # 7-tuple traces engine._matvec's scaled SELL program)
+            sl = rowmax_scales(np.abs(dl).max(axis=1, initial=0.0))
+            sh = rowmax_scales(np.abs(dh).max(axis=1, initial=0.0))
+            self._operands = (
+                jnp.asarray(quantize_int8(dl, sl[:, None])), jnp.asarray(il),
+                jnp.asarray(quantize_int8(dh, sh[:, None])), jnp.asarray(ih),
+                jnp.asarray(inv, jnp.int32), jnp.asarray(sl),
+                jnp.asarray(sh))
+        else:
+            dtype = self.storage_dtype
+            self._operands = (jnp.asarray(dl).astype(dtype), jnp.asarray(il),
+                              jnp.asarray(dh).astype(dtype), jnp.asarray(ih),
+                              jnp.asarray(inv, jnp.int32))
         self.layout = (f"sell(k_low={k_low}, k_high={k_high}, "
                        f"n_high={len(high_rows)}, slack={self._slack})")
+        if self.precision != "f32":
+            self.layout = f"{self.layout}[{self.precision}]"
+        self._record_layout_bytes()
 
     def _bsr_index(self, src: np.ndarray, dst: np.ndarray) -> None:
         """Host map of the prepared BSR block structure: sorted int64
@@ -562,9 +590,12 @@ class DynamicPageRankEngine(PageRankEngine):
                 self.run_tol(tol=tol, max_iters=max_iters)
             return self._pr, UpdateInfo("noop", 0, 0, 0, 0, 0, 0.0, False)
         # validate BEFORE committing any bookkeeping, so a raise leaves the
-        # engine exactly as it was (no half-applied delta)
+        # engine exactly as it was (no half-applied delta).  int8 layouts
+        # never patch: a changed row needs a new quantization scale, and
+        # re-scaling re-quantizes the whole row — a rebuild in disguise.
         patchable = (self.backend in PATCHABLE_BACKENDS
-                     and not plan["overflow"])
+                     and not plan["overflow"]
+                     and self.precision != "int8")
         coerced_from = None
         if strategy == "auto":
             if (plan["n_changed"] > self.rebuild_frac
@@ -585,7 +616,7 @@ class DynamicPageRankEngine(PageRankEngine):
             raise ValueError(
                 f"strategy {strategy!r} needs a patchable layout "
                 f"(backend in {PATCHABLE_BACKENDS}, no capacity overflow "
-                f"or BSR block-structure change)")
+                f"or BSR block-structure change, precision != 'int8')")
         elif strategy == "push" and self._pr is None:
             raise ValueError("push needs previous ranks; run/run_tol first")
 
@@ -745,16 +776,21 @@ class DynamicPageRankEngine(PageRankEngine):
             dang = jax.device_put(dang, NamedSharding(self.mesh, P()))
         self._dang = dang
         if self.backend in ("dense", "dense_sharded"):
-            # the sharded H is stored dangling-UNFIXED (explicit leak), the
-            # single-device dense operand dangling-fixed
+            # the sharded and reduced-precision H are stored dangling-
+            # UNFIXED (explicit leak), the single-device f32 dense operand
+            # dangling-fixed; patch columns are cast to the layout's
+            # storage dtype (a no-op on f32) so the scatter never widens it
+            H0 = self._operands[0]
             mat = np.stack([self._column(int(u), fix_dangling=self.backend
-                                         == "dense")
+                                         == "dense"
+                                         and self.precision == "f32")
                             for u in cols], axis=0)        # (C, n)
             ci, mats = _stack_chunks(cols, mat, cap=32)
             sharding = (None if self.mesh is None
                         else NamedSharding(self.mesh, P(*self._axes)))
-            H = _scatter_cols(self._operands[0], jnp.asarray(ci),
-                              jnp.asarray(mats), n=n, sharding=sharding)
+            H = _scatter_cols(H0, jnp.asarray(ci),
+                              jnp.asarray(mats).astype(H0.dtype), n=n,
+                              sharding=sharding)
             self._operands = (H,)
             return 0, len(cols)
         if self.backend == "bsr":
@@ -770,7 +806,8 @@ class DynamicPageRankEngine(PageRankEngine):
             pos, dat, ix = _stack_chunks(rows, data, idx, cap=64)
             sharding = NamedSharding(self.mesh, P(self._axes))
             pos = jnp.asarray(pos)
-            data_op = _scatter_rows(data_op, pos, jnp.asarray(dat),
+            data_op = _scatter_rows(data_op, pos,
+                                    jnp.asarray(dat).astype(data_op.dtype),
                                     sharding=sharding)
             idx_op = _scatter_rows(idx_op, pos, jnp.asarray(ix),
                                    sharding=sharding)
@@ -782,7 +819,8 @@ class DynamicPageRankEngine(PageRankEngine):
             mat = np.stack([self._column(int(u), fix_dangling=False)
                             for u in cols], axis=0)        # (C, n)
             ci, mats = _stack_chunks(cols, mat, cap=32)
-            Hp = _scatter_cols(Hp, jnp.asarray(ci), jnp.asarray(mats), n=n)
+            Hp = _scatter_cols(Hp, jnp.asarray(ci),
+                               jnp.asarray(mats).astype(Hp.dtype), n=n)
             for ci, f in _chunks(cols, flags, cap=32):
                 dangp = dangp.at[0, jnp.asarray(ci)].set(jnp.asarray(f))
             self._operands = (Hp, dangp)
@@ -801,10 +839,12 @@ class DynamicPageRankEngine(PageRankEngine):
                                          cap=cap)
             pos = jnp.asarray(pos)
             if tier:
-                dh = _scatter_rows(dh, pos, jnp.asarray(dat))
+                dh = _scatter_rows(dh, pos,
+                                   jnp.asarray(dat).astype(dh.dtype))
                 ih = _scatter_rows(ih, pos, jnp.asarray(ix))
             else:
-                dl = _scatter_rows(dl, pos, jnp.asarray(dat))
+                dl = _scatter_rows(dl, pos,
+                                   jnp.asarray(dat).astype(dl.dtype))
                 il = _scatter_rows(il, pos, jnp.asarray(ix))
         self._operands = (dl, il, dh, ih, inv)
         return len(rows), len(cols)
@@ -840,7 +880,7 @@ class DynamicPageRankEngine(PageRankEngine):
         b, s, r, c, v = _stack_chunks(br, sl, lr, lc, vals, cap=256)
         blocks = _scatter_block_vals(
             bsr.blocks, jnp.asarray(b), jnp.asarray(s), jnp.asarray(r),
-            jnp.asarray(c), jnp.asarray(v))
+            jnp.asarray(c), jnp.asarray(v).astype(bsr.blocks.dtype))
         self._operands = (dataclasses.replace(bsr, blocks=blocks),)
 
     def _rebuild_rows(self, sel: np.ndarray, k: int

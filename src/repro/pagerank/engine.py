@@ -57,8 +57,9 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.graph import delta as delta_mod
 from repro.graph import transition as tr
-from repro.graph.sparse import ELLMatrix
+from repro.graph.sparse import BSRMatrix, ELLMatrix
 from repro.kernels import ops as kops
+from repro.kernels.common import upcast_f32
 from repro.kernels.pagerank_step import (pad_pagerank_operands,
                                          pagerank_step_fused)
 from repro.kernels.streaming_matvec import streaming_matvec
@@ -67,13 +68,17 @@ from repro.pagerank import distributed as dist
 from repro.obs.registry import default_registry
 from repro.obs.trace import SolveTrace, instrumented_tol_loop
 from repro.pagerank.dense import pagerank_dense, pagerank_dense_fixed
+from repro.pagerank.precision import (PRECISIONS, STORAGE_DTYPES,
+                                      layout_nbytes, quantize_int8,
+                                      resolve_precision, rowmax_scales,
+                                      solve_dtype)
 from repro.pagerank.resilience import (ConvergenceError, SolveResult,
                                        make_solve_info)
 from repro.pagerank.steps import (dense_step, ppr_step, ppr_step_batched,
                                   seed_matrix, sparse_step)
 
 __all__ = ["PageRankEngine", "select_backend", "dense_step", "sparse_step",
-           "ppr_step", "ppr_step_batched", "seed_matrix"]
+           "ppr_step", "ppr_step_batched", "seed_matrix", "PRECISIONS"]
 
 BACKENDS = ("dense", "ell", "bsr", "pallas_dense", "dense_sharded",
             "ell_sharded")
@@ -85,7 +90,8 @@ BSR_DENSITY = 0.02      # at/below (sparsity >= 98%): block-sparse rows win
 
 
 def select_backend(n: int, density: float, device: str | None = None,
-                   n_devices: int | None = None) -> str:
+                   n_devices: int | None = None,
+                   precision: str = "auto") -> str:
     """Pick an execution backend from graph density and the device topology.
 
     ``device`` defaults to ``jax.default_backend()`` so the same code picks
@@ -93,7 +99,14 @@ def select_backend(n: int, density: float, device: str | None = None,
     ``n_devices`` defaults to ``jax.device_count()`` so a multi-device
     process auto-picks the sharded tiers (the single-device heuristics only
     apply on one chip).
+
+    ``precision`` is accepted (and validated) so callers can route the
+    engine's full configuration through one chooser, but it deliberately
+    does **not** alter the choice: every backend supports every storage
+    tier, and ``"auto"`` precision always resolves to ``"f32"`` — reduced
+    precision is an explicit accuracy trade, never an auto-policy pick.
     """
+    resolve_precision(precision)
     device = device or jax.default_backend()
     n_devices = jax.device_count() if n_devices is None else n_devices
     if n_devices > 1:
@@ -161,11 +174,31 @@ def _split_ell(src: np.ndarray, dst: np.ndarray, n: int,
             jnp.asarray(vals[ov], jnp.float32)), k0, int(ov.sum())
 
 
+def _row_scale(y: jax.Array, scales: jax.Array | None) -> jax.Array:
+    """Fold an int8 layout's per-row f32 dequantization scales into the
+    accumulated f32 row sums (vector or batched-matrix shaped)."""
+    if scales is None:
+        return y
+    return y * (scales if y.ndim == 1 else scales[:, None])
+
+
 def _matvec(backend: str, operands, x: jax.Array) -> jax.Array:
+    """Dispatch y = H @ x on the prepared layout tag.
+
+    Value arrays may be stored reduced-precision (bf16/f16/int8); they are
+    upcast at the multiply (a trace-time no-op on f32 layouts, keeping the
+    f32 tier's program bit-identical) and accumulated in f32.  int8
+    layouts append their per-row f32 scale vectors to the operand tuple —
+    the tuple length is static under jit, so the scaled variants trace to
+    their own programs and the float tiers never pay a branch.
+    """
     if backend == "dense":
-        return operands[0] @ x
+        scales = operands[1] if len(operands) == 2 else None
+        return _row_scale(upcast_f32(operands[0]) @ x, scales)
     if backend == "ell":
-        data, idx, ov_r, ov_c, ov_v = operands
+        data, idx, ov_r, ov_c, ov_v = operands[:5]
+        scales = operands[5] if len(operands) == 6 else None
+        data, ov_v = upcast_f32(data), upcast_f32(ov_v)
         n = data.shape[0]
         if x.ndim == 1:
             y = jnp.sum(data * x[idx], axis=1)
@@ -175,20 +208,24 @@ def _matvec(backend: str, operands, x: jax.Array) -> jax.Array:
             y = jnp.sum(data[..., None] * x[idx], axis=1)
             tail = jax.ops.segment_sum(ov_v[:, None] * x[ov_c], ov_r,
                                        num_segments=n)
-        return y + tail
+        return _row_scale(y + tail, scales)
     if backend == "sell":
         # two-bucket sliced ELLPACK (the dynamic engine's patchable ELL
         # tier, repro.pagerank.dynamic): rows permuted into a low tier and
         # a hub tier, two dense gathers, no segment_sum
-        dl, il, dh, ih, inv = operands
+        dl, il, dh, ih, inv = operands[:5]
+        sl, sh = operands[5:7] if len(operands) == 7 else (None, None)
+        dl, dh = upcast_f32(dl), upcast_f32(dh)
         if x.ndim == 1:
             yl = jnp.sum(dl * x[il], axis=1)
             yh = jnp.sum(dh * x[ih], axis=1)
         else:
             yl = jnp.sum(dl[..., None] * x[il], axis=1)
             yh = jnp.sum(dh[..., None] * x[ih], axis=1)
-        return jnp.concatenate([yl, yh], axis=0)[inv]
+        return jnp.concatenate([_row_scale(yl, sl), _row_scale(yh, sh)],
+                               axis=0)[inv]
     if backend == "bsr":
+        # BSRMatrix upcasts its own blocks and owns its row_scales field
         bsr = operands[0]
         return bsr.matvec(x) if x.ndim == 1 else bsr.matmat(x)
     raise ValueError(f"unknown backend {backend!r}")
@@ -229,13 +266,16 @@ def _run_tol(operands, dang, d, tol, x0, *, backend: str, n: int,
 @partial(jax.jit, static_argnames=("backend", "n", "n_iters"))
 def _run_ppr(operands, dang, V, d, *, backend: str, n: int, n_iters: int):
     if backend == "dense":
-        # the dense operand is the dangling-FIXED H (uniform 1/n leak
+        # the f32 dense operand is the dangling-FIXED H (uniform 1/n leak
         # folded into the dangling columns — right for global PageRank,
         # wrong for PPR where the leak teleports to V).  Zeroing those
         # columns reconstructs the unfixed H exactly; hoisted out of the
-        # scan as a loop invariant.
-        H = operands[0] * (1.0 - dang)[None, :]
-        mv = lambda X: H @ X
+        # scan as a loop invariant.  Reduced-precision dense tiers store H
+        # *unfixed* (their dangling columns are already zero), so the same
+        # masking is a mathematical no-op and one program serves both.
+        scales = operands[1] if len(operands) == 2 else None
+        H = upcast_f32(operands[0]) * (1.0 - dang)[None, :]
+        mv = lambda X: _row_scale(H @ X, scales)
     else:
         mv = lambda X: _matvec(backend, operands, X)
 
@@ -254,59 +294,65 @@ def _run_ppr(operands, dang, V, d, *, backend: str, n: int, n_iters: int):
 # distributed schedules themselves live in repro.pagerank.distributed.       #
 # --------------------------------------------------------------------------- #
 @partial(jax.jit, static_argnames=("mesh", "axes", "n_true", "n_iters", "d"))
-def _run_fixed_dense_sharded(H, dang, *, mesh, axes, n_true, n_iters, d):
+def _run_fixed_dense_sharded(H, dang, scales=None, *, mesh, axes, n_true,
+                             n_iters, d):
     pr = dist.pagerank_distributed(H, mesh, n_iters=n_iters, d=d,
                                    row_axis=axes[0], col_axis=axes[1],
-                                   dangling=dang, n_true=n_true)
+                                   dangling=dang, n_true=n_true,
+                                   scales=scales)
     return pr[:n_true]
 
 
 @partial(jax.jit, static_argnames=("mesh", "axes", "n_true", "max_iters",
                                    "d", "watchdog", "trace"))
-def _run_tol_dense_sharded(H, dang, tol, x0, *, mesh, axes, n_true,
-                           max_iters, d, watchdog: bool = True,
+def _run_tol_dense_sharded(H, dang, tol, x0, scales=None, *, mesh, axes,
+                           n_true, max_iters, d, watchdog: bool = True,
                            trace: bool = False):
     pr, iters, res, grow, ring = dist.pagerank_distributed_tol(
         H, mesh, tol=tol, max_iters=max_iters, d=d, row_axis=axes[0],
         col_axis=axes[1], dangling=dang, n_true=n_true, x0=x0,
-        watchdog=watchdog, trace=trace)
+        watchdog=watchdog, trace=trace, scales=scales)
     return pr[:n_true], iters, res, grow, ring
 
 
 @partial(jax.jit, static_argnames=("mesh", "axes", "n_true", "n_iters", "d"))
-def _run_ppr_dense_sharded(H, dang, V, *, mesh, axes, n_true, n_iters, d):
+def _run_ppr_dense_sharded(H, dang, V, scales=None, *, mesh, axes, n_true,
+                           n_iters, d):
     # H is stored dangling-UNFIXED for this tier, so the PPR schedule can
     # teleport the leak to V directly — no column reconstruction needed.
     PR = dist.ppr_distributed_dense(H, dang, V, mesh, n_iters=n_iters, d=d,
-                                    row_axis=axes[0], col_axis=axes[1])
+                                    row_axis=axes[0], col_axis=axes[1],
+                                    scales=scales)
     return PR[:n_true]
 
 
 @partial(jax.jit, static_argnames=("mesh", "axes", "n_true", "n_iters", "d"))
-def _run_fixed_ell_sharded(data, idx, dang, *, mesh, axes, n_true, n_iters,
-                           d):
+def _run_fixed_ell_sharded(data, idx, dang, scales=None, *, mesh, axes,
+                           n_true, n_iters, d):
     pr = dist.pagerank_distributed_sparse(data, idx, mesh, n_iters=n_iters,
                                           d=d, dangling=dang, axes=axes,
-                                          n_true=n_true)
+                                          n_true=n_true, scales=scales)
     return pr[:n_true]
 
 
 @partial(jax.jit, static_argnames=("mesh", "axes", "n_true", "max_iters",
                                    "d", "watchdog", "trace"))
-def _run_tol_ell_sharded(data, idx, dang, tol, x0, *, mesh, axes, n_true,
-                         max_iters, d, watchdog: bool = True,
+def _run_tol_ell_sharded(data, idx, dang, tol, x0, scales=None, *, mesh,
+                         axes, n_true, max_iters, d, watchdog: bool = True,
                          trace: bool = False):
     pr, iters, res, grow, ring = dist.pagerank_distributed_sparse_tol(
         data, idx, mesh, tol=tol, max_iters=max_iters, d=d, dangling=dang,
-        axes=axes, n_true=n_true, x0=x0, watchdog=watchdog, trace=trace)
+        axes=axes, n_true=n_true, x0=x0, watchdog=watchdog, trace=trace,
+        scales=scales)
     return pr[:n_true], iters, res, grow, ring
 
 
 @partial(jax.jit, static_argnames=("mesh", "axes", "n_true", "n_iters", "d"))
-def _run_ppr_ell_sharded(data, idx, dang, V, *, mesh, axes, n_true, n_iters,
-                         d):
+def _run_ppr_ell_sharded(data, idx, dang, V, scales=None, *, mesh, axes,
+                         n_true, n_iters, d):
     PR = dist.ppr_distributed_sparse(data, idx, dang, V, mesh,
-                                     n_iters=n_iters, d=d, axes=axes)
+                                     n_iters=n_iters, d=d, axes=axes,
+                                     scales=scales)
     return PR[:n_true]
 
 
@@ -315,15 +361,16 @@ def _run_ppr_ell_sharded(data, idx, dang, V, *, mesh, axes, n_true, n_iters,
 # --------------------------------------------------------------------------- #
 @partial(jax.jit, static_argnames=("n", "n_iters", "d", "block_n",
                                    "block_m", "interpret"))
-def _run_fixed_pallas(Hp, dangp, *, n: int, n_iters: int, d: float,
-                      block_n: int, block_m: int, interpret: bool):
+def _run_fixed_pallas(Hp, dangp, scales=None, *, n: int, n_iters: int,
+                      d: float, block_n: int, block_m: int,
+                      interpret: bool):
     Mp = Hp.shape[1]
     xp0 = jnp.pad(jnp.full((n,), 1.0 / n, jnp.float32), (0, Mp - n))[None, :]
     t0 = d * jnp.sum(xp0 * dangp) / n + (1.0 - d) / n
 
     def body(carry, _):
         xp, t = carry
-        yp, leak = pagerank_step_fused(Hp, xp, dangp, t, d=d,
+        yp, leak = pagerank_step_fused(Hp, xp, dangp, t, scales, d=d,
                                        block_n=block_n, block_m=block_m,
                                        interpret=interpret)
         return (yp, d * leak / n + (1.0 - d) / n), None
@@ -335,9 +382,10 @@ def _run_fixed_pallas(Hp, dangp, *, n: int, n_iters: int, d: float,
 @partial(jax.jit, static_argnames=("n", "max_iters", "d", "block_n",
                                    "block_m", "interpret", "watchdog",
                                    "trace"))
-def _run_tol_pallas(Hp, dangp, tol, x0, *, n: int, max_iters: int, d: float,
-                    block_n: int, block_m: int, interpret: bool,
-                    watchdog: bool = True, trace: bool = False):
+def _run_tol_pallas(Hp, dangp, tol, x0, scales=None, *, n: int,
+                    max_iters: int, d: float, block_n: int, block_m: int,
+                    interpret: bool, watchdog: bool = True,
+                    trace: bool = False):
     Mp = Hp.shape[1]
     x0 = jnp.full((n,), 1.0 / n, jnp.float32) if x0 is None else x0
     xp0 = jnp.pad(x0, (0, Mp - n))[None, :]
@@ -345,7 +393,7 @@ def _run_tol_pallas(Hp, dangp, tol, x0, *, n: int, max_iters: int, d: float,
 
     def step(carry):
         xp, t = carry
-        yp, leak = pagerank_step_fused(Hp, xp, dangp, t, d=d,
+        yp, leak = pagerank_step_fused(Hp, xp, dangp, t, scales, d=d,
                                        block_n=block_n, block_m=block_m,
                                        interpret=interpret)
         res = jnp.sum(jnp.abs(yp[0, :n] - xp[0, :n]))
@@ -359,14 +407,19 @@ def _run_tol_pallas(Hp, dangp, tol, x0, *, n: int, max_iters: int, d: float,
 
 @partial(jax.jit, static_argnames=("n", "n_iters", "d", "block_n",
                                    "block_m", "interpret"))
-def _run_ppr_pallas(Hp, dangp, Vp, *, n: int, n_iters: int, d: float,
-                    block_n: int, block_m: int, interpret: bool):
+def _run_ppr_pallas(Hp, dangp, Vp, scales=None, *, n: int, n_iters: int,
+                    d: float, block_n: int, block_m: int, interpret: bool):
     # Vp: (Q, Np) — queries ride the batch axis of streaming_matvec, so all
-    # Q teleport distributions share one sweep over Hp per iteration.
+    # Q teleport distributions share one sweep over Hp per iteration.  The
+    # kernel upcasts reduced-precision Hp tiles in-register; an int8
+    # layout's (1, Np) row scales fold into the f32 output here (Y's
+    # column axis is Hp's row axis).
     def body(PR, _):
         leak = jnp.sum(PR * dangp, axis=1)                # (Q,)
         Y = streaming_matvec(Hp, PR, block_n=block_n, block_m=block_m,
                              interpret=interpret)
+        if scales is not None:
+            Y = Y * scales
         return d * (Y + Vp * leak[:, None]) + (1.0 - d) * Vp, None
 
     PR, _ = jax.lax.scan(body, Vp, None, length=n_iters)
@@ -408,7 +461,7 @@ class PageRankEngine:
                  block_n: int = 256, block_m: int = 256,
                  bsr_block_size: int = 128, ell_k: int | None = None,
                  interpret: bool | None = None, mesh: Mesh | None = None,
-                 metrics=None):
+                 metrics=None, precision: str = "auto"):
         self.n = int(n)
         self.d = float(d)
         src, dst = _dedupe_edges(np.asarray(src), np.asarray(dst), self.n)
@@ -416,6 +469,12 @@ class PageRankEngine:
         self.density = self.n_edges / float(self.n * self.n)
         self.interpret = (kops.default_interpret() if interpret is None
                           else bool(interpret))
+        # storage precision of the prepared layout's value arrays; the
+        # solve itself (rank vectors, residuals, accumulation) is always
+        # f32, and "auto" resolves to "f32" — bit-identical to the
+        # pre-precision engine
+        self.precision = resolve_precision(precision)
+        self.storage_dtype = STORAGE_DTYPES[self.precision]
         self.backend = (select_backend(self.n, self.density)
                         if backend == "auto" else backend)
         if self.backend not in BACKENDS:
@@ -451,19 +510,58 @@ class PageRankEngine:
         self._axes: tuple[str, ...] = ()
         self._n_pad = self.n
         self._ppr_operands: tuple | None = None
+        # int8 per-row dequantization scales of the pallas/sharded tiers
+        # (the XLA tiers append theirs to the operand tuple instead);
+        # always None for float precisions
+        self._scales = None
+        self._ppr_scales = None
         # the layout tag the generic jitted runners dispatch _matvec on —
         # normally the backend itself; the dynamic engine's patchable SELL
         # tier overrides it while keeping backend == "ell"
         self._mv_backend = self.backend
         self.layout = self.backend
         if self.backend == "dense":
-            self._operands = (tr.build_transition_dense(src, dst, n),)
+            if self.precision == "f32":
+                self._operands = (tr.build_transition_dense(src, dst, n),)
+            else:
+                # reduced tiers store H dangling-UNFIXED (the fix would
+                # densify the dangling columns with 1/n values that
+                # quantize poorly) and pay the explicit scalar leak via
+                # the generic runners' sparse_step
+                H = np.asarray(tr.build_transition_dense(
+                    src, dst, n, fix_dangling=False))
+                if self.precision == "int8":
+                    scales = rowmax_scales(
+                        np.abs(H).max(axis=1, initial=0.0))
+                    self._operands = (
+                        jnp.asarray(quantize_int8(H, scales[:, None])),
+                        jnp.asarray(scales))
+                else:
+                    self._operands = (
+                        jnp.asarray(H).astype(self.storage_dtype),)
         elif self.backend == "ell":
             self._operands, k0, ov_nnz = _split_ell(src, dst, n, k0=ell_k)
             self.layout = f"ell(k0={k0})+overflow(nnz={ov_nnz})"
+            if self.precision != "f32":
+                self._operands = self._quantize_split_ell(self._operands)
         elif self.backend == "bsr":
-            self._operands = (tr.build_transition_bsr(src, dst, n,
-                                                      bs=bsr_block_size),)
+            bsr = tr.build_transition_bsr(src, dst, n, bs=bsr_block_size)
+            if self.precision == "int8":
+                blocks = np.asarray(bsr.blocks)
+                nb_r, _, bs, _ = blocks.shape
+                # per-row abs-max across the block budget: axis 2 is the
+                # row within a block, so reduce over (slot, in-block col)
+                absmax = np.abs(blocks).max(axis=(1, 3))    # (nb_r, bs)
+                scales = rowmax_scales(absmax.reshape(-1))  # (nb_r*bs,)
+                bsr = BSRMatrix(
+                    jnp.asarray(quantize_int8(
+                        blocks, scales.reshape(nb_r, 1, bs, 1))),
+                    bsr.block_cols, shape=bsr.shape,
+                    row_scales=jnp.asarray(scales))
+            elif self.precision != "f32":
+                bsr = BSRMatrix(bsr.blocks.astype(self.storage_dtype),
+                                bsr.block_cols, shape=bsr.shape)
+            self._operands = (bsr,)
         elif self.backend == "dense_sharded":
             self.mesh = mesh if mesh is not None else _default_mesh(
                 self.backend)
@@ -476,8 +574,20 @@ class PageRankEngine:
             Hp = np.zeros((self._n_pad, self._n_pad), np.float32)
             Hp[:n, :n] = np.asarray(tr.build_transition_dense(
                 src, dst, n, fix_dangling=False))
-            self._operands = (jax.device_put(
-                Hp, NamedSharding(self.mesh, P(*self._axes))),)
+            blk = NamedSharding(self.mesh, P(*self._axes))
+            if self.precision == "int8":
+                scales = rowmax_scales(np.abs(Hp).max(axis=1, initial=0.0))
+                self._operands = (jax.device_put(
+                    quantize_int8(Hp, scales[:, None]), blk),)
+                # replicated: _dense_iter folds it into the P(row)-sharded
+                # accumulated row sums
+                self._scales = jax.device_put(
+                    scales, NamedSharding(self.mesh, P()))
+            elif self.precision != "f32":
+                self._operands = (jax.device_put(
+                    jnp.asarray(Hp).astype(self.storage_dtype), blk),)
+            else:
+                self._operands = (jax.device_put(Hp, blk),)
             self._dang = self._pad_replicated(self._dang)
             self.layout = (f"dense_sharded({r}x{c} mesh, "
                            f"n_pad={self._n_pad})")
@@ -502,8 +612,20 @@ class PageRankEngine:
             data[:n] = np.asarray(ell.data)
             idx[:n] = np.asarray(ell.indices)
             rows = NamedSharding(self.mesh, P(self._axes))
-            self._operands = (jax.device_put(data, rows),
-                              jax.device_put(idx, rows))
+            if self.precision == "int8":
+                scales = rowmax_scales(np.abs(data).max(axis=1,
+                                                        initial=0.0))
+                data_dev = jax.device_put(
+                    quantize_int8(data, scales[:, None]), rows)
+                # row-sharded like the ELL operands: _ell_block_iter folds
+                # the local scale block into its local row sums
+                self._scales = jax.device_put(scales, rows)
+            elif self.precision != "f32":
+                data_dev = jax.device_put(
+                    jnp.asarray(data).astype(self.storage_dtype), rows)
+            else:
+                data_dev = jax.device_put(data, rows)
+            self._operands = (data_dev, jax.device_put(idx, rows))
             self._dang = self._pad_replicated(self._dang)
             self.layout = (f"ell_sharded(k={ell.k}, shards={ndev}, "
                            f"n_pad={self._n_pad})")
@@ -511,8 +633,49 @@ class PageRankEngine:
             H = tr.build_transition_dense(src, dst, n, fix_dangling=False)
             Hp, dangp, bn, bm = pad_pagerank_operands(
                 H, self._dang, block_n=block_n, block_m=block_m)
+            if self.precision == "int8":
+                Hp_np = np.asarray(Hp)
+                scales = rowmax_scales(
+                    np.abs(Hp_np).max(axis=1, initial=0.0))
+                Hp = jnp.asarray(quantize_int8(Hp_np, scales[:, None]))
+                # (1, Np): the fused kernel applies it per row-block in
+                # the same drain epilogue as the affine term
+                self._scales = jnp.asarray(scales)[None, :]
+            elif self.precision != "f32":
+                Hp = Hp.astype(self.storage_dtype)
             self._operands = (Hp, dangp)
             self._block = (bn, bm)
+        if self.precision != "f32":
+            self.layout = f"{self.layout}[{self.precision}]"
+        self._record_layout_bytes()
+
+    def _quantize_split_ell(self, operands: tuple) -> tuple:
+        """Cast a prepared split-ELL layout's value arrays to the reduced
+        storage dtype.  int8 scales are computed over the FULL row — the
+        ELL block's entries and the COO overflow tail share the row's
+        abs-max — and appended as a sixth operand."""
+        data, idx, ov_r, ov_c, ov_v = operands
+        if self.precision != "int8":
+            return (data.astype(self.storage_dtype), idx, ov_r, ov_c,
+                    ov_v.astype(self.storage_dtype))
+        data_np, ov_v_np = np.asarray(data), np.asarray(ov_v)
+        ov_r_np = np.asarray(ov_r)
+        absmax = np.abs(data_np).max(axis=1, initial=0.0)
+        np.maximum.at(absmax, ov_r_np, np.abs(ov_v_np))
+        scales = rowmax_scales(absmax)
+        return (jnp.asarray(quantize_int8(data_np, scales[:, None])), idx,
+                ov_r, ov_c,
+                jnp.asarray(quantize_int8(ov_v_np, scales[ov_r_np])),
+                jnp.asarray(scales))
+
+    def _record_layout_bytes(self) -> None:
+        """Operand-byte accounting of the prepared layout (value vs index
+        bytes — precision tiers shrink only the former), exported as the
+        ``layout.bytes`` gauge and kept as ``self.layout_bytes``."""
+        extras = () if self._scales is None else (self._scales,)
+        self.layout_bytes = layout_nbytes(tuple(self._operands) + extras)
+        self.metrics.gauge("layout.bytes").set(
+            self.layout_bytes["total_bytes"])
 
     def _pad_replicated(self, dang: jax.Array) -> jax.Array:
         padded = np.zeros((self._n_pad,), np.float32)
@@ -531,19 +694,20 @@ class PageRankEngine:
         all-reduces in ``.compile().as_text()``)."""
         if self.backend == "dense_sharded":
             return _run_fixed_dense_sharded.lower(
-                self._operands[0], self._dang, mesh=self.mesh,
-                axes=self._axes, n_true=self.n, n_iters=n_iters, d=self.d)
+                self._operands[0], self._dang, self._scales,
+                mesh=self.mesh, axes=self._axes, n_true=self.n,
+                n_iters=n_iters, d=self.d)
         if self.backend == "ell_sharded":
             return _run_fixed_ell_sharded.lower(
-                *self._operands, self._dang, mesh=self.mesh,
+                *self._operands, self._dang, self._scales, mesh=self.mesh,
                 axes=self._axes, n_true=self.n, n_iters=n_iters, d=self.d)
-        if self.backend == "dense":
+        if self.backend == "dense" and self.precision == "f32":
             return pagerank_dense_fixed.lower(
                 self._operands[0], n_iters=n_iters, d=self.d)
         if self.backend == "pallas_dense":
             return _run_fixed_pallas.lower(
-                *self._operands, n=self.n, n_iters=n_iters, d=self.d,
-                block_n=self._block[0], block_m=self._block[1],
+                *self._operands, self._scales, n=self.n, n_iters=n_iters,
+                d=self.d, block_n=self._block[0], block_m=self._block[1],
                 interpret=self.interpret)
         return _run_fixed.lower(self._operands, self._dang, self.d,
                                 backend=self._mv_backend, n=self.n,
@@ -554,20 +718,23 @@ class PageRankEngine:
         """Fixed-schedule power iteration; one compiled dispatch."""
         if self.backend == "dense_sharded":
             return _run_fixed_dense_sharded(
-                self._operands[0], self._dang, mesh=self.mesh,
-                axes=self._axes, n_true=self.n, n_iters=n_iters, d=self.d)
+                self._operands[0], self._dang, self._scales,
+                mesh=self.mesh, axes=self._axes, n_true=self.n,
+                n_iters=n_iters, d=self.d)
         if self.backend == "ell_sharded":
             return _run_fixed_ell_sharded(
-                *self._operands, self._dang, mesh=self.mesh,
+                *self._operands, self._dang, self._scales, mesh=self.mesh,
                 axes=self._axes, n_true=self.n, n_iters=n_iters, d=self.d)
         if self.backend == "pallas_dense":
             Hp, dangp = self._operands
             return _run_fixed_pallas(
-                Hp, dangp, n=self.n, n_iters=n_iters, d=self.d,
-                block_n=self._block[0], block_m=self._block[1],
+                Hp, dangp, self._scales, n=self.n, n_iters=n_iters,
+                d=self.d, block_n=self._block[0], block_m=self._block[1],
                 interpret=self.interpret)
-        if self.backend == "dense":
-            # the reference program itself -> bit-identical to it
+        if self.backend == "dense" and self.precision == "f32":
+            # the reference program itself -> bit-identical to it; the
+            # reduced-precision dense tiers store H unfixed and take the
+            # generic explicit-leak runner below instead
             return pagerank_dense_fixed(self._operands[0], n_iters=n_iters,
                                         d=self.d)
         return _run_fixed(self._operands, self._dang, self.d,
@@ -604,34 +771,39 @@ class PageRankEngine:
         device (:class:`~repro.obs.trace.SolveTrace`, surfaced as
         ``result.info.trace`` — zero host syncs until its ``residuals``
         are read); ``trace=False`` compiles the ring out entirely."""
-        x0 = None if x0 is None else jnp.asarray(x0, jnp.float32)
+        # THE single coercion point for user solve inputs: float32 passes
+        # through untouched, float64 gets one explicit warned downcast
+        # (checked on the host dtype — with x64 disabled, asarray would
+        # downcast silently), everything else is cast to the solve dtype
+        x0 = solve_dtype(x0, name="x0")
+        tol_f32 = solve_dtype(tol, name="tol")
         with self.metrics.span("solve", backend=self.backend):
             if self.backend == "dense_sharded":
                 out = _run_tol_dense_sharded(
-                    self._operands[0], self._dang, jnp.float32(tol),
-                    self._pad_x0(x0), mesh=self.mesh, axes=self._axes,
-                    n_true=self.n, max_iters=max_iters, d=self.d,
-                    watchdog=watchdog, trace=trace)
+                    self._operands[0], self._dang, tol_f32,
+                    self._pad_x0(x0), self._scales, mesh=self.mesh,
+                    axes=self._axes, n_true=self.n, max_iters=max_iters,
+                    d=self.d, watchdog=watchdog, trace=trace)
             elif self.backend == "ell_sharded":
                 out = _run_tol_ell_sharded(
-                    *self._operands, self._dang, jnp.float32(tol),
-                    self._pad_x0(x0), mesh=self.mesh, axes=self._axes,
-                    n_true=self.n, max_iters=max_iters, d=self.d,
-                    watchdog=watchdog, trace=trace)
+                    *self._operands, self._dang, tol_f32,
+                    self._pad_x0(x0), self._scales, mesh=self.mesh,
+                    axes=self._axes, n_true=self.n, max_iters=max_iters,
+                    d=self.d, watchdog=watchdog, trace=trace)
             elif self.backend == "pallas_dense":
                 Hp, dangp = self._operands
                 out = _run_tol_pallas(
-                    Hp, dangp, jnp.float32(tol), x0, n=self.n,
+                    Hp, dangp, tol_f32, x0, self._scales, n=self.n,
                     max_iters=max_iters, d=self.d, block_n=self._block[0],
                     block_m=self._block[1], interpret=self.interpret,
                     watchdog=watchdog, trace=trace)
-            elif self.backend == "dense":
-                out = pagerank_dense(self._operands[0], d=self.d, tol=tol,
-                                     max_iters=max_iters, x0=x0,
-                                     watchdog=watchdog, trace=trace)
+            elif self.backend == "dense" and self.precision == "f32":
+                out = pagerank_dense(self._operands[0], d=self.d,
+                                     tol=tol_f32, max_iters=max_iters,
+                                     x0=x0, watchdog=watchdog, trace=trace)
             else:
                 out = _run_tol(self._operands, self._dang, self.d,
-                               jnp.float32(tol), x0,
+                               tol_f32, x0,
                                backend=self._mv_backend, n=self.n,
                                max_iters=max_iters, watchdog=watchdog,
                                trace=trace)
@@ -651,8 +823,9 @@ class PageRankEngine:
         m = self.metrics
         m.counter("engine.solves").inc()
         m.counter(f"engine.solve.{info.status}").inc()
-        m.event("solve", backend=self.backend, iters=info.iters,
-                residual=info.residual, status=info.status)
+        m.event("solve", backend=self.backend, precision=self.precision,
+                iters=info.iters, residual=info.residual,
+                status=info.status)
         if info.failed:
             m.event("watchdog", backend=self.backend, iters=info.iters,
                     residual=info.residual, status=info.status)
@@ -706,8 +879,8 @@ class PageRankEngine:
             if self.backend == "dense_sharded":
                 PR = _run_ppr_dense_sharded(
                     self._operands[0], self._dang, jnp.asarray(Vp),
-                    mesh=self.mesh, axes=self._axes, n_true=self.n,
-                    n_iters=n_iters, d=self.d)
+                    self._scales, mesh=self.mesh, axes=self._axes,
+                    n_true=self.n, n_iters=n_iters, d=self.d)
             else:
                 if self._ppr_operands is None:
                     # PPR propagates query blocks against *replicated*
@@ -718,19 +891,22 @@ class PageRankEngine:
                     self._ppr_operands = tuple(
                         jax.device_put(np.asarray(o), rep)
                         for o in self._operands)
+                    if self._scales is not None:
+                        self._ppr_scales = jax.device_put(
+                            np.asarray(self._scales), rep)
                 PR = _run_ppr_ell_sharded(
                     *self._ppr_operands, self._dang, jnp.asarray(Vp),
-                    mesh=self.mesh, axes=self._axes, n_true=self.n,
-                    n_iters=n_iters, d=self.d)
+                    self._ppr_scales, mesh=self.mesh, axes=self._axes,
+                    n_true=self.n, n_iters=n_iters, d=self.d)
             return PR[:, :q]
         if self.backend == "pallas_dense":
             Hp, dangp = self._operands
             Vp = np.zeros((V.shape[1], Hp.shape[1]), np.float32)
             Vp[:, :self.n] = V.T
             return _run_ppr_pallas(
-                Hp, dangp, jnp.asarray(Vp), n=self.n, n_iters=n_iters,
-                d=self.d, block_n=self._block[0], block_m=self._block[1],
-                interpret=self.interpret)
+                Hp, dangp, jnp.asarray(Vp), self._scales, n=self.n,
+                n_iters=n_iters, d=self.d, block_n=self._block[0],
+                block_m=self._block[1], interpret=self.interpret)
         return _run_ppr(self._operands, self._dang, jnp.asarray(V), self.d,
                         backend=self._mv_backend, n=self.n,
                         n_iters=n_iters)

@@ -1,0 +1,116 @@
+"""Reduced-precision layout tiers: storage dtypes, quantization, accounting.
+
+The engine's SpMV tiers are memory-bound, so halving the operand bytes is
+the single biggest per-iteration win (Parravicini et al., PAPERS.md:
+"reduced-precision streaming SpMV for Personalized PageRank on FPGA").
+Every prepared layout carries a ``precision`` dimension:
+
+* ``"f32"``  — today's behavior, bit-identical to the pre-precision engine
+  (the float32 tiers dispatch the very same jitted programs: the shared
+  upcasts are trace-time no-ops on float32 operands).
+* ``"bf16"`` / ``"f16"`` — the H/ELL/SELL/BSR *value* arrays (and the
+  dense-sharded shards) are stored in the reduced dtype; every kernel
+  upcasts tiles in-register and accumulates in float32.
+* ``"int8"`` — experimental: per-row-scaled integers (``q = round(v/s)``
+  with ``s = rowmax/127``, float32 scales), dequantized by folding the
+  row scale into the already-accumulated float32 row sums.  The
+  low-precision-state / high-precision-update idiom: the stored operand is
+  8-bit, the update rule (accumulate, damp, teleport) is float32.
+
+The rank vector, the dangling mask, residuals, and all loop carries stay
+float32 in every tier — only the prepared operand values shrink.
+"""
+from __future__ import annotations
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PRECISIONS", "STORAGE_DTYPES", "SOLVE_DTYPE",
+           "resolve_precision", "solve_dtype", "rowmax_scales",
+           "quantize_int8", "layout_nbytes"]
+
+PRECISIONS = ("f32", "bf16", "f16", "int8")
+
+STORAGE_DTYPES = {
+    "f32": jnp.float32,
+    "bf16": jnp.bfloat16,
+    "f16": jnp.float16,
+    "int8": jnp.int8,
+}
+
+# every solve (rank vectors, residuals, scales, accumulation) runs here
+SOLVE_DTYPE = jnp.float32
+
+
+def resolve_precision(precision: str) -> str:
+    """Validate and resolve a precision tier; ``"auto"`` stays ``"f32"`` —
+    reduced precision is an explicit accuracy trade the caller opts into,
+    never something the auto policy silently picks."""
+    if precision == "auto":
+        return "f32"
+    if precision not in PRECISIONS:
+        raise ValueError(
+            f"precision {precision!r} not in {PRECISIONS + ('auto',)}")
+    return precision
+
+
+def solve_dtype(x, name: str = "x0"):
+    """Coerce a user-supplied solve input (warm-start vector, tolerance) to
+    the engine's float32 solve dtype — THE single coercion point, replacing
+    the scattered ``jnp.asarray(x, jnp.float32)`` calls that silently
+    downcast.  ``None`` passes through; float32 passes through untouched
+    (warm starts are never re-cast); a float64 input gets one explicit,
+    warned downcast.  The float64 check reads the *host* dtype before
+    ``asarray``, because with x64 disabled JAX itself would downcast
+    silently."""
+    if x is None:
+        return None
+    host_dt = getattr(x, "dtype", None)
+    if host_dt is not None and np.dtype(host_dt) == np.float64:
+        warnings.warn(
+            f"{name} is float64 but the engine solves in float32; "
+            "downcasting once here (pass float32 to silence)",
+            UserWarning, stacklevel=3)
+    x = jnp.asarray(x)
+    if x.dtype == SOLVE_DTYPE:
+        return x
+    return x.astype(SOLVE_DTYPE)
+
+
+def rowmax_scales(absmax: np.ndarray) -> np.ndarray:
+    """Per-row int8 dequantization scales from per-row abs-maxima:
+    ``s = rowmax / 127`` so the largest entry maps to ±127; all-zero rows
+    get scale 1.0 (their quantized entries are 0 regardless, and a zero
+    scale would NaN the dequant of future patches)."""
+    absmax = np.asarray(absmax, np.float32)
+    return np.where(absmax > 0, absmax / 127.0, 1.0).astype(np.float32)
+
+
+def quantize_int8(vals: np.ndarray, scales: np.ndarray) -> np.ndarray:
+    """Round-to-nearest int8 quantization ``q = clip(rint(v / s), ±127)``.
+    ``scales`` must broadcast against ``vals`` (pre-expanded to the row
+    axis by the caller)."""
+    q = np.rint(np.asarray(vals, np.float32) / scales)
+    return np.clip(q, -127, 127).astype(np.int8)
+
+
+def layout_nbytes(operands) -> dict:
+    """Byte accounting of a prepared layout, split into *value* bytes (the
+    matrix values — what precision tiers shrink — plus their float32
+    scales) and *index* bytes (int32 column/row/permutation arrays, which
+    no precision tier touches).  The bf16 "≤ 0.55× f32" claim is on the
+    value bytes; total bytes are recorded alongside so index-heavy layouts
+    (ELL) are reported honestly."""
+    value = index = 0
+    for leaf in jax.tree.leaves(operands):
+        nbytes = int(leaf.size) * leaf.dtype.itemsize
+        if jnp.issubdtype(leaf.dtype, jnp.integer) and \
+                leaf.dtype != jnp.int8:
+            index += nbytes
+        else:
+            value += nbytes
+    return {"value_bytes": int(value), "index_bytes": int(index),
+            "total_bytes": int(value + index)}

@@ -406,7 +406,8 @@ class PageRankQueryEngine:
             m.counter(f"serve.queries.{status}").inc(len(batch))
         m.event("serve", batch=len(batch), freshness_lag_s=lag,
                 graph_version=batch[0].graph_version, ms=ms,
-                status=status)
+                status=status,
+                precision=getattr(self.engine, "precision", "f32"))
         return batch
 
     def _flush(self) -> list[PPRQuery]:

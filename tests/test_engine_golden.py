@@ -130,6 +130,43 @@ def test_committed_bench_artifact_dynamic_sharded_claims_hold():
         assert b["rebuild_cold_ms"] / b["update_ms"] >= 5.0, name
 
 
+def test_committed_bench_artifact_precision_claims_hold():
+    """The ``precision`` block (benchmarks/precision_bench.py) must keep
+    the acceptance claims: all four tiers recorded, the f32 tier
+    bit-identical to the pre-precision engine, bf16 operand value bytes
+    <= 0.55x f32 per layout, bf16/f16 top-100 overlap >= 0.99 and
+    Kendall-tau >= 0.95 vs the f32 fixed point at tol=1e-6, and the
+    <=64-edge bf16 SELL delta refreshing via push within 1e-5 of a
+    same-precision cold solve.  Wall-clock speedup may only be claimed
+    where the storage dtype executes natively."""
+    with open(BENCH_PATH) as f:
+        prec = json.load(f)["precision"]
+    assert prec["n"] == 2048 and prec["tol"] == 1e-6
+    tiers = prec["tiers"]
+    for layout in ("dense", "ell", "bsr"):
+        for p in ("f32", "bf16", "f16", "int8"):
+            assert f"{layout}/{p}" in tiers, f"missing tier {layout}/{p}"
+        ratio = (tiers[f"{layout}/bf16"]["value_bytes"]
+                 / tiers[f"{layout}/f32"]["value_bytes"])
+        assert ratio <= 0.55, f"{layout} bf16 bytes ratio {ratio:.3f}"
+        for p in ("bf16", "f16"):
+            t = tiers[f"{layout}/{p}"]
+            assert t["top100_overlap"] >= 0.99, (layout, p)
+            assert t["kendall_tau_top100"] >= 0.95, (layout, p)
+    claim = prec["claim"]
+    assert claim["f32_bit_identical"] is True
+    assert claim["bf16_bytes_le_0.55x"] is True
+    assert claim["overlap_ge_0.99"] is True
+    assert claim["tau_ge_0.95"] is True
+    dyn = prec["dynamic_bf16_sell"]
+    assert dyn["n_changed_directed"] <= 64
+    assert dyn["no_rebuild"] is True and dyn["strategy"] == "push"
+    assert dyn["parity_l1_vs_cold_same_precision"] <= 1e-5
+    if prec["device"] != "tpu":
+        assert prec["speed_claimed"] is False, (
+            "speedup must not be claimed on emulated dtypes")
+
+
 def test_committed_bench_artifact_observability_claims_hold():
     """The ``observability`` block (benchmarks/observability_bench.py) must
     keep the acceptance claims: the solve-trace ring and the full metrics
