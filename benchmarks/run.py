@@ -21,7 +21,8 @@ def main() -> None:
                             fig6a_matvec_latency, fig6b_pagerank_throughput,
                             kernel_bench, observability_bench,
                             pagerank_engine_bench, precision_bench,
-                            resilience_bench, roofline, table1_design)
+                            resilience_bench, roofline, serve_bench,
+                            table1_design)
 
     smoke = "--smoke" in sys.argv
     quick = "--quick" in sys.argv or smoke
@@ -33,6 +34,8 @@ def main() -> None:
         resilience_kw = dict(n=256, iters=10, reps=3, out_path=None)
         obs_kw = dict(n=256, iters=10, reps=3, out_path=None)
         precision_kw = dict(n=256, iters=3, reps=1, out_path=None)
+        serve_kw = dict(n=256, pool=8, picks=40, delta_every=10,
+                        n_hubs=8, out_path=None)
     elif quick:
         sizes, iters = [1000, 2000], 20
         # out_path=None: never overwrite the full-size JSON artifact with
@@ -43,6 +46,8 @@ def main() -> None:
         resilience_kw = dict(n=1024, iters=50, reps=3, out_path=None)
         obs_kw = dict(n=1024, iters=50, reps=3, out_path=None)
         precision_kw = dict(n=1024, iters=20, reps=3, out_path=None)
+        serve_kw = dict(n=1024, pool=16, picks=120, delta_every=30,
+                        n_hubs=16, out_path=None)
     else:
         sizes, iters = None, 100
         engine_kw = dict()
@@ -51,6 +56,7 @@ def main() -> None:
         resilience_kw = dict()
         obs_kw = dict()
         precision_kw = dict()
+        serve_kw = dict()
 
     benches = [
         fig5_routing.run,
@@ -65,6 +71,7 @@ def main() -> None:
         (lambda: resilience_bench.run(**resilience_kw)),
         (lambda: observability_bench.run(**obs_kw)),
         (lambda: precision_bench.run(**precision_kw)),
+        (lambda: serve_bench.run(**serve_kw)),
         roofline.run,
     ]
     print("name,us_per_call,derived")

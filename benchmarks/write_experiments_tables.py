@@ -13,6 +13,8 @@ from benchmarks.roofline import analyze_cell, load_records, render_table
 
 PRECISION_BEGIN = "<!-- precision-table:begin (generated) -->"
 PRECISION_END = "<!-- precision-table:end -->"
+SERVE_BEGIN = "<!-- serve-table:begin (generated) -->"
+SERVE_END = "<!-- serve-table:end -->"
 
 
 def precision_table() -> str:
@@ -62,6 +64,64 @@ def splice_precision(doc: str) -> str:
             + PRECISION_END + post)
 
 
+def serve_table() -> str:
+    """Markdown serve-path summary from the committed ``serve`` BENCH
+    block (latency split by cache outcome + fidelity/parity claims)."""
+    if not os.path.exists(OUT_PATH):
+        return "(no BENCH_pagerank_engine.json — run serve_bench)"
+    with open(OUT_PATH) as f:
+        s = json.load(f).get("serve")
+    if not s:
+        return "(no serve block — run benchmarks/serve_bench.py)"
+    c = s["claim"]
+    lines = [
+        f"N={s['n']} Barabasi-Albert graph, Zipf({s['zipf_s']:g}) over a "
+        f"{s['pool']}-set pool, {s['picks']} queries, "
+        f"{s['edges_per_delta']} preferential edges every "
+        f"{s['delta_every']} queries, {s['n_hubs']} hubs, device "
+        f"`{s['device']}`.",
+        "",
+        "| path | p50 (ms) | p95 (ms) | count |",
+        "|---|---|---|---|",
+    ]
+    for name, key in (("cached hit", "hit_ms"), ("miss (solved)",
+                                                 "miss_ms"),
+                      ("cold baseline (pre-PR)", "cold_ms")):
+        p = s[key]
+        p50 = "—" if p["p50"] is None else f"{p['p50']:.3f}"
+        p95 = "—" if p["p95"] is None else f"{p['p95']:.3f}"
+        lines.append(f"| {name} | {p50} | {p95} | {p['count']} |")
+    cache = s["cache"]
+    lines += [
+        "",
+        f"Hit rate {s['measured_hit_rate']:.2f} measured vs "
+        f"{c['achievable_hit_rate']:.2f} achievable (gate >= 0.8: "
+        f"{c['achievable_ge_0.8']}); cached-hit p50 "
+        f"{c['hit_p50_speedup_vs_cold']:.1f}x faster than cold (gate >= "
+        f"10x: {c['hit_p50_ge_10x_faster']}). Hub fidelity vs exact: "
+        f"min top-100 overlap {c['min_top100_overlap']:.3f}, min "
+        f"Kendall-tau {c['min_kendall_tau_top100']:.3f} (gates >= 0.99: "
+        f"{c['overlap_ge_0.99']}/{c['tau_ge_0.99']}). Post-delta cache "
+        f"parity {c['post_delta_parity_l1']:.1e} L1 (gate <= 1e-5: "
+        f"{c['parity_le_1e-5']}). Cache: {cache['hits']} hits / "
+        f"{cache['misses']} misses, {cache['invalidations']} invalidated "
+        f"across {s['graph_version']} graph versions, "
+        f"{cache['evictions']} LRU evictions.",
+    ]
+    return "\n".join(lines)
+
+
+def splice_serve(doc: str) -> str:
+    """Replace the marker-delimited serve table in-place; leave the
+    document untouched when the markers are absent."""
+    if SERVE_BEGIN not in doc or SERVE_END not in doc:
+        return doc
+    pre, rest = doc.split(SERVE_BEGIN, 1)
+    _, post = rest.split(SERVE_END, 1)
+    return (pre + SERVE_BEGIN + "\n" + serve_table() + "\n"
+            + SERVE_END + post)
+
+
 def section(dirname: str, mesh: str, title: str) -> str:
     recs = load_records(dirname, mesh=mesh)
     if not recs:
@@ -97,11 +157,12 @@ def main() -> None:
     with open("EXPERIMENTS.md") as f:
         doc = f.read()
     doc = splice_precision(doc)
+    doc = splice_serve(doc)
     doc = re.sub(r"## Appendix A —.*", "", doc, flags=re.S).rstrip()
     doc += "\n\n" + text
     with open("EXPERIMENTS.md", "w") as f:
         f.write(doc)
-    print("EXPERIMENTS.md precision table + appendices updated "
+    print("EXPERIMENTS.md precision + serve tables + appendices updated "
           f"({text.count('|') // 10} roofline rows)")
 
 

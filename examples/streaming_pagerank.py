@@ -43,6 +43,11 @@ def main(argv=None) -> None:
                     help="append the live observability event log here")
     ap.add_argument("--metrics-out", default=None,
                     help="dump the final registry as_dict JSON here")
+    ap.add_argument("--cache", action="store_true",
+                    help="serve a Zipf-repeating query pool through the "
+                         "delta-aware result cache (repro.serve.cache); "
+                         "prints the hit rate and gates cached answers "
+                         "against an exact post-stream solve")
     args = ap.parse_args(argv)
     n = args.nodes
 
@@ -58,26 +63,53 @@ def main(argv=None) -> None:
           f"layout={engine.layout}, devices={jax.device_count()}, "
           f"cold solve {int(iters)} iters")
 
-    serve = PageRankQueryEngine(engine, n_iters=60, max_batch=4,
-                                metrics=metrics)
+    # --cache: a Zipf-repeating pool of seed sets through the delta-aware
+    # result cache (higher n_iters so cached answers beat the exact-parity
+    # gate below); without the flag the serve path is byte-identical to
+    # the pre-cache example
+    cache = pool = zipf = None
+    cache_rng = np.random.default_rng(1)
+    if args.cache:
+        from repro.serve import ResultCache
+        cache = ResultCache(capacity=32)
+        pool = [np.sort(cache_rng.choice(n, size=3, replace=False))
+                for _ in range(8)]
+        zipf = 1.0 / np.arange(1, 9, dtype=np.float64) ** 1.1
+        zipf /= zipf.sum()
+    serve = PageRankQueryEngine(engine,
+                                n_iters=100 if args.cache else 60,
+                                max_batch=4, metrics=metrics, cache=cache)
     rng = np.random.default_rng(0)
     cur = (src, dst)
     for step, delta in zip(range(args.steps), stream):
-        serve.push_update(delta)          # edges arrive while queries queue
+        # cache mode interleaves deltas on alternate ticks: delta ticks
+        # exercise the delta-aware invalidation (perturbed entries drop),
+        # quiet ticks let the Zipf repeats hit
+        pushed = (not args.cache) or step % 2 == 0
+        if pushed:
+            serve.push_update(delta)      # edges arrive while queries queue
         queries = [serve.submit(uid=step * 10 + q,
-                                seeds=rng.choice(n, size=3, replace=False),
+                                seeds=(pool[cache_rng.choice(8, p=zipf)]
+                                       if args.cache else
+                                       rng.choice(n, size=3,
+                                                  replace=False)),
                                 top_k=5)
                    for q in range(3)]
         t0 = time.perf_counter()
         serve.flush()                     # refresh graph, then serve batch
         dt = (time.perf_counter() - t0) * 1e3
         info = serve.last_update_info
-        cur = apply_delta(cur[0], cur[1], delta, n)
+        if pushed:
+            cur = apply_delta(cur[0], cur[1], delta, n)
+            refresh = (f"+{delta.n_insert // 2}/-{delta.n_delete // 2} "
+                       f"edges  refresh={info.strategy:7s} "
+                       f"({info.iters:3d} sweeps, residual "
+                       f"{info.residual:.1e})")
+        else:
+            refresh = "+0/-0 edges  refresh=  (skipped: quiet tick)"
         top = queries[0].result[0][:3]
         lag = metrics.gauge("serve.freshness_lag_s").value or 0.0
-        print(f"t={delta.timestamp:4.1f}  +{delta.n_insert // 2}/"
-              f"-{delta.n_delete // 2} edges  refresh={info.strategy:7s} "
-              f"({info.iters:3d} sweeps, residual {info.residual:.1e})  "
+        print(f"t={delta.timestamp:4.1f}  {refresh}  "
               f"flush {dt:6.1f} ms  lag {lag:5.3f} s  "
               f"top proteins uid{queries[0].uid}: {top}")
 
@@ -93,6 +125,26 @@ def main(argv=None) -> None:
     if h["count"]:
         print(f"serve latency: n={h['count']}  p50={h['p50']:.1f} ms  "
               f"p95={h['p95']:.1f} ms")
+    if args.cache:
+        total = cache.hits + cache.misses
+        print(f"result cache: {cache.hits}/{total} hits "
+              f"({len(cache)} live entries, "
+              f"{cache.invalidations} invalidated across "
+              f"{serve.graph_version} graph versions)")
+        if cache.hits == 0:     # a Zipf pool of 8 must repeat within a run
+            raise SystemExit("cache smoke failure: zero hits")
+        # every cached answer must match an exact solve of the FINAL graph
+        entries = list(cache._entries.items())
+        if entries:
+            exact = np.asarray(scratch.ppr(
+                [list(k[1]) for k, _ in entries], n_iters=300))
+            worst = max(float(np.abs(e.ranks - exact[:, j]).sum())
+                        for j, (_, e) in enumerate(entries))
+            print(f"cached-vs-exact parity over {len(entries)} entries: "
+                  f"L1 <= {worst:.2e}")
+            if worst > 1e-4:
+                raise SystemExit(
+                    f"cache parity failure: L1={worst:.2e} > 1e-4")
     if args.metrics_out:
         metrics.dump_json(args.metrics_out)
         print(f"registry dump -> {args.metrics_out}")

@@ -53,12 +53,32 @@ def derive(events: list[dict], window: int = DEFAULT_WINDOW) -> dict:
     batch_ms = Histogram(window)
     last_lag = None
     spans = {}
+    # result-cache story (serve events carry the per-flush cache fields
+    # only when a cache is attached; cache_invalidate events ride every
+    # cache-aware refresh) — "active" flips when either appears
+    cache = {"active": False, "hits": 0, "misses": 0, "evictions": 0,
+             "invalidations": 0, "kept": None}
+    cache_hit_ms = Histogram(window)
+    cache_miss_ms = Histogram(window)
     for ev in events:
         kind = ev.get("kind")
         if kind == "serve":
             queries[ev["status"]] += ev["batch"]
             batch_ms.observe(ev["ms"])
             last_lag = ev.get("freshness_lag_s", last_lag)
+            if "cache_hits" in ev:
+                cache["active"] = True
+                cache["hits"] += ev["cache_hits"]
+                cache["misses"] += ev["cache_misses"]
+                cache["evictions"] += ev["cache_evictions"]
+                if ev.get("hit_ms") is not None:
+                    cache_hit_ms.observe(ev["hit_ms"])
+                if ev.get("miss_ms") is not None:
+                    cache_miss_ms.observe(ev["miss_ms"])
+        elif kind == "cache_invalidate":
+            cache["active"] = True
+            cache["invalidations"] += ev["dropped"]
+            cache["kept"] = ev["kept"]
         elif kind == "refresh":
             refreshes[ev["status"]] += 1
         elif kind == "solve":
@@ -74,7 +94,8 @@ def derive(events: list[dict], window: int = DEFAULT_WINDOW) -> dict:
             "solves": dict(solves), "dead_letters": dead_letters,
             "dead_reasons": dict(dead_reasons),
             "batch_ms": batch_ms, "freshness_lag_s": last_lag,
-            "spans": spans}
+            "spans": spans, "cache": cache,
+            "cache_hit_ms": cache_hit_ms, "cache_miss_ms": cache_miss_ms}
 
 
 def _fmt_hist(h: Histogram) -> str:
@@ -96,6 +117,19 @@ def render(d: dict) -> str:
     if d["freshness_lag_s"] is not None:
         lines.append(f"freshness lag (last serve): "
                      f"{d['freshness_lag_s']:.3f}s")
+    if d["cache"]["active"]:
+        c = d["cache"]
+        lines.append("-- result cache --")
+        lookups = c["hits"] + c["misses"]
+        rate = c["hits"] / lookups if lookups else 0.0
+        lines.append(f"lookups: {lookups}  hits: {c['hits']}  "
+                     f"misses: {c['misses']}  (hit rate {rate:.2f})")
+        lines.append(f"evictions: {c['evictions']}  "
+                     f"invalidated: {c['invalidations']}"
+                     + (f"  kept after last delta: {c['kept']}"
+                        if c["kept"] is not None else ""))
+        lines.append(f"hit latency:  {_fmt_hist(d['cache_hit_ms'])}")
+        lines.append(f"miss latency: {_fmt_hist(d['cache_miss_ms'])}")
     lines.append("-- refresh ladder --")
     for status in sorted(d["refreshes"]):
         lines.append(f"  {status:<10} {d['refreshes'][status]}")
@@ -146,6 +180,22 @@ def cross_check(d: dict, metrics: dict) -> list[str]:
             if got.get(q) != hist.get(q):
                 errs.append(f"serve.batch_ms {q}: log={got.get(q)} "
                             f"registry={hist.get(q)}")
+    if d["cache"]["active"]:
+        for name in ("hits", "misses", "evictions", "invalidations"):
+            want = counters.get(f"serve.cache.{name}", 0)
+            if want != d["cache"][name]:
+                errs.append(f"serve.cache.{name}: log={d['cache'][name]} "
+                            f"registry={want}")
+        for name, h in (("serve.cache.hit_ms", d["cache_hit_ms"]),
+                        ("serve.cache.miss_ms", d["cache_miss_ms"])):
+            hist = metrics.get("histograms", {}).get(name)
+            if hist is None or hist.get("count", 0) == 0:
+                continue
+            got = h.summary()
+            for q in ("count", "p50", "p95", "p99", "min", "max"):
+                if got.get(q) != hist.get(q):
+                    errs.append(f"{name} {q}: log={got.get(q)} "
+                                f"registry={hist.get(q)}")
     return errs
 
 

@@ -4,6 +4,7 @@ from repro.pagerank.distributed import pagerank_distributed
 from repro.pagerank.fabric import pagerank_on_fabric
 from repro.pagerank.engine import PageRankEngine, select_backend
 from repro.pagerank.dynamic import DynamicPageRankEngine, UpdateInfo
+from repro.pagerank.landmarks import LandmarkIndex
 from repro.pagerank.resilience import (ConvergenceError, EngineSnapshot,
                                        FaultInjector, RankStore,
                                        RefreshOutcome, ResilientRefresher,
@@ -12,6 +13,7 @@ from repro.pagerank.resilience import (ConvergenceError, EngineSnapshot,
 __all__ = ["pagerank_dense", "pagerank_dense_fixed", "pagerank_sparse",
            "pagerank_distributed", "pagerank_on_fabric", "PageRankEngine",
            "select_backend", "DynamicPageRankEngine", "UpdateInfo",
+           "LandmarkIndex",
            "ConvergenceError", "EngineSnapshot", "FaultInjector",
            "RankStore", "RefreshOutcome", "ResilientRefresher",
            "RetryPolicy", "SolveInfo", "SolveResult"]

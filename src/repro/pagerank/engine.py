@@ -467,6 +467,14 @@ class PageRankEngine:
         src, dst = _dedupe_edges(np.asarray(src), np.asarray(dst), self.n)
         self.n_edges = int(len(src))
         self.density = self.n_edges / float(self.n * self.n)
+        # host edge-set bookkeeping (sorted src*n+dst keys + degree
+        # vectors): the landmark/hub subsystem
+        # (repro.pagerank.landmarks) reads hub degrees and
+        # out-neighborhoods off any prepared engine; the dynamic engine
+        # keeps these fresh across deltas
+        self._keys = delta_mod.edge_keys(src, dst, self.n)
+        self._outdeg = np.bincount(src, minlength=self.n).astype(np.int64)
+        self._indeg = np.bincount(dst, minlength=self.n).astype(np.int64)
         self.interpret = (kops.default_interpret() if interpret is None
                           else bool(interpret))
         # storage precision of the prepared layout's value arrays; the

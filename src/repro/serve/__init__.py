@@ -1,6 +1,8 @@
+from repro.serve.cache import CacheEntry, ResultCache
 from repro.serve.engine import (PageRankQueryEngine, PPRQuery, Request,
                                 ServeEngine, ServeResilience,
                                 batched_decode_fn)
 
 __all__ = ["Request", "ServeEngine", "batched_decode_fn",
-           "PageRankQueryEngine", "PPRQuery", "ServeResilience"]
+           "PageRankQueryEngine", "PPRQuery", "ServeResilience",
+           "CacheEntry", "ResultCache"]

@@ -28,6 +28,7 @@ from repro.pagerank.engine import PageRankEngine
 from repro.pagerank.resilience import (RankStore, ResilientRefresher,
                                        RetryPolicy, ppr_healthy)
 from repro.pagerank.sparse import top_k_proteins
+from repro.serve.cache import ResultCache
 
 
 @dataclasses.dataclass
@@ -183,6 +184,10 @@ class PPRQuery:
     #              ranks substituted
     status: str = "unserved"
     graph_version: int = -1       # RankStore version the result was built on
+    # cache-enabled engines stamp how the answer was produced:
+    # "hit" (served from cache) / "miss" (solved this flush); None when
+    # the engine runs without a cache
+    cache_outcome: str | None = None
 
 
 class PageRankQueryEngine:
@@ -216,12 +221,24 @@ class PageRankQueryEngine:
     was answered from, so callers can tell exactly what they got.  With
     ``resilience=None`` (default) behavior is the legacy raise-on-error
     path, unchanged.
+
+    **Serve acceleration** (both optional, independent) — ``cache`` (a
+    :class:`~repro.serve.cache.ResultCache`) answers repeated seed sets
+    host-side; refreshes invalidate only the entries whose ranks the
+    delta's Gauss–Southwell frontier actually perturbed (see
+    ``_after_refresh``), never wholesale.  ``landmarks`` (a
+    :class:`~repro.pagerank.landmarks.LandmarkIndex` over the same
+    engine) replaces cold batched power iterations with hub-combination
+    warm starts plus a short bounded residual push.  Every query is
+    stamped ``cache_outcome`` (``"hit"``/``"miss"``) and flushes record
+    per-outcome counters and latency histograms.
     """
 
     def __init__(self, engine: PageRankEngine, n_iters: int = 100,
                  max_batch: int = 8, refresh_tol: float = 1e-6,
                  resilience: ServeResilience | None = None,
-                 metrics=None):
+                 metrics=None, cache: ResultCache | None = None,
+                 landmarks=None):
         self.engine = engine
         self.n_iters = n_iters
         self.max_batch = max_batch
@@ -233,6 +250,18 @@ class PageRankQueryEngine:
         self.resilience = resilience
         self.last_refresh_outcome = None
         self._stale = False
+        # serve-acceleration layer (both optional, independent):
+        # ``cache`` answers repeat seed sets without touching the device
+        # (delta-aware invalidation — see repro.serve.cache); ``landmarks``
+        # (a repro.pagerank.landmarks.LandmarkIndex over this engine)
+        # replaces cold batched solves with hub-combination + short push
+        self.cache = cache
+        self.landmarks = landmarks
+        # cache-consistency clock: bumped on every applied refresh (and on
+        # any recovery that may have moved the engine past the cached
+        # entries' graph), independent of the resilience RankStore version
+        self.graph_version = 0
+        self._last_flush_stats: dict | None = None
         # metrics sink: share the engine's registry by default so solves,
         # updates, and serves land in one event log
         self.metrics = (metrics if metrics is not None
@@ -332,6 +361,10 @@ class PageRankQueryEngine:
             return []
         merged = deltas[0] if len(deltas) == 1 else compose(
             deltas, self.engine.n, symmetric=self.engine.symmetric)
+        # pre-update out-degrees anchor the per-column perturbation
+        # weights of the delta-aware cache invalidation
+        old_outdeg = (np.asarray(self.engine._outdeg).copy()
+                      if self.cache is not None else None)
         if self.resilience is None:
             try:
                 _, info = self.engine.update(merged, tol=self.refresh_tol)
@@ -344,6 +377,7 @@ class PageRankQueryEngine:
             self.metrics.counter("serve.refresh.ok").inc()
             self.metrics.event("refresh", applied=True, attempts=1,
                                status="ok", strategy=info.strategy)
+            self._after_refresh(merged, old_outdeg)
             return [info]
         self._ensure_baseline()
         outcome = self.refresher.refresh(self.engine, merged,
@@ -365,12 +399,61 @@ class PageRankQueryEngine:
             self.n_refreshes += 1
             self.last_update_info = outcome.update_info
             self._last_refresh_t = time.monotonic()
+            if outcome.status == "ok":
+                self._after_refresh(merged, old_outdeg)
+            else:
+                # "recovered": the engine was rebuilt from host bookkeeping
+                # after a poisoned solve — the per-column story no longer
+                # describes how far the graph moved, so flush wholesale
+                self._invalidate_all()
         else:
             # the graph never took the delta (every retry raised, or the
             # engine was rolled back to the snapshot) — re-queue it ahead
             # of anything pushed meanwhile, so order is preserved
             self._pending_deltas = deltas + self._pending_deltas
+            if outcome.status == "restored":
+                # rollback may have moved the graph BEHIND the cached
+                # entries (the snapshot can predate served answers)
+                self._invalidate_all()
         return [outcome]
+
+    # ------------------------ cache invalidation ----------------------- #
+    def _after_refresh(self, merged, old_outdeg) -> None:
+        """Bump the cache-consistency clock after an applied delta and run
+        the delta-aware invalidation: the transition columns that changed
+        are exactly the delta's source endpoints, and a column's L1
+        perturbation is bounded by ``2·(#changed edges at u)/deg(u)`` (an
+        edge at a high-degree hub barely moves its column; at a leaf it
+        rewrites it).  Entries holding enough rank mass on perturbed
+        columns to matter are dropped; the rest are re-stamped — see
+        :meth:`ResultCache.invalidate`."""
+        self.graph_version += 1
+        if self.cache is None:
+            return
+        cols = np.concatenate([
+            np.asarray(merged.insert_src, np.int64),
+            np.asarray(merged.delete_src, np.int64)])
+        uniq, counts = np.unique(cols, return_counts=True)
+        new_deg = np.asarray(self.engine._outdeg)[uniq].astype(np.float64)
+        old_deg = old_outdeg[uniq].astype(np.float64)
+        w = np.minimum(2.0, 2.0 * counts
+                       / np.maximum(np.maximum(old_deg, new_deg), 1.0))
+        dropped, kept = self.cache.invalidate(uniq, w, self.graph_version)
+        self.metrics.counter("serve.cache.invalidations").inc(dropped)
+        self.metrics.event("cache_invalidate", cols=int(uniq.size),
+                           dropped=dropped, kept=kept,
+                           version=self.graph_version)
+
+    def _invalidate_all(self) -> None:
+        """Escape hatch for recovery paths with no per-column story."""
+        self.graph_version += 1
+        if self.cache is None:
+            return
+        dropped, kept = self.cache.invalidate(None, None,
+                                              self.graph_version)
+        self.metrics.counter("serve.cache.invalidations").inc(dropped)
+        self.metrics.event("cache_invalidate", cols=None, dropped=dropped,
+                           kept=kept, version=self.graph_version)
 
     def flush(self) -> list[PPRQuery]:
         """Serve every queued query with one batched device dispatch —
@@ -404,10 +487,27 @@ class PageRankQueryEngine:
         m.counter("serve.queries").inc(len(batch))
         if self.resilience is not None:
             m.counter(f"serve.queries.{status}").inc(len(batch))
+        extra = {}
+        if self.cache is not None:
+            st = self._last_flush_stats or {}
+            m.counter("serve.cache.hits").inc(st.get("hits", 0))
+            m.counter("serve.cache.misses").inc(st.get("misses", 0))
+            m.counter("serve.cache.evictions").inc(st.get("evictions", 0))
+            if st.get("hit_ms") is not None:
+                m.histogram("serve.cache.hit_ms").observe(st["hit_ms"])
+            if st.get("miss_ms") is not None:
+                m.histogram("serve.cache.miss_ms").observe(st["miss_ms"])
+            # additive optional fields: the event schema stays v=1 and
+            # cache-less logs are byte-identical to before
+            extra = dict(cache_hits=st.get("hits", 0),
+                         cache_misses=st.get("misses", 0),
+                         cache_evictions=st.get("evictions", 0),
+                         hit_ms=st.get("hit_ms"), miss_ms=st.get("miss_ms"))
         m.event("serve", batch=len(batch), freshness_lag_s=lag,
                 graph_version=batch[0].graph_version, ms=ms,
                 status=status,
-                precision=getattr(self.engine, "precision", "f32"))
+                precision=getattr(self.engine, "precision", "f32"),
+                **extra)
         return batch
 
     def _flush(self) -> list[PPRQuery]:
@@ -416,18 +516,68 @@ class PageRankQueryEngine:
         batch, self._queue = self._queue, []
         if not batch:
             return []
+        if self.cache is None:
+            self._serve_queries(batch)
+            return batch
+        # cache-enabled path: answer repeats from the cache (no device
+        # work), solve only the misses, and cache what the misses produced
+        precision = str(getattr(self.engine, "precision", "f32"))
+        t0 = time.perf_counter()
+        hits: list[tuple[PPRQuery, np.ndarray]] = []
+        misses: list[tuple[PPRQuery, tuple]] = []
+        for q in batch:
+            key = ResultCache.key(q.seeds, precision)
+            ranks = self.cache.get(key, self.graph_version)
+            if ranks is not None:
+                hits.append((q, ranks))
+            else:
+                misses.append((q, key))
+        st = {"hits": len(hits), "misses": len(misses), "evictions": 0,
+              "hit_ms": None, "miss_ms": None}
+        if hits:
+            status = "stale" if self._stale else "fresh"
+            version = (self.refresher.store.version
+                       if self.resilience is not None else -1)
+            for q, ranks in hits:
+                idx, scores = top_k_proteins(ranks, k=q.top_k)
+                q.result = (np.asarray(idx), np.asarray(scores))
+                q.cache_outcome = "hit"
+                if self.resilience is not None:
+                    q.status = status
+                    q.graph_version = version
+            st["hit_ms"] = (time.perf_counter() - t0) * 1e3
+        if misses:
+            t1 = time.perf_counter()
+            PPR = self._serve_queries([q for q, _ in misses])
+            for j, (q, key) in enumerate(misses):
+                q.cache_outcome = "miss"
+                if PPR is not None and q.status != "degraded":
+                    st["evictions"] += self.cache.put(
+                        key, np.asarray(PPR[:, j], np.float32),
+                        self.graph_version)
+            st["miss_ms"] = (time.perf_counter() - t1) * 1e3
+        self._last_flush_stats = st
+        return batch
+
+    def _serve_queries(self, batch) -> np.ndarray | None:
+        """Answer ``batch`` in place (results + resilience tags) with one
+        batched solve; returns the solved (N, Q) matrix so the cache path
+        can keep the full rank vectors (``None`` when the resilient path
+        degraded to global ranks — never cached)."""
         if self.resilience is None:
-            PPR = self.engine.ppr([q.seeds for q in batch],
-                                  n_iters=self.n_iters)    # (N, Q)
+            PPR = self._solve_batch([q.seeds for q in batch])  # (N, Q)
             for j, q in enumerate(batch):
                 idx, scores = top_k_proteins(PPR[:, j], k=q.top_k)
                 q.result = (np.asarray(idx), np.asarray(scores))
-            return batch
+            return PPR
         PPR = self._serve_ppr(batch)
         if PPR is None and self._recoverable():
             # one recovery attempt, then one re-serve — bounded work per
-            # flush, no retry storm
+            # flush, no retry storm.  Recovery rebuilds/rolls back the
+            # engine, so any cached answer may now describe a different
+            # graph: flush wholesale (no per-column story exists)
             self.refresher.recover(self.engine, tol=self.refresh_tol)
+            self._invalidate_all()
             PPR = self._serve_ppr(batch)
         version = self.refresher.store.version
         if PPR is not None:
@@ -437,7 +587,7 @@ class PageRankQueryEngine:
                 q.result = (np.asarray(idx), np.asarray(scores))
                 q.status = status
                 q.graph_version = version
-            return batch
+            return PPR
         # degraded: answer from the last-known-good global ranks (or the
         # uniform distribution if no snapshot exists yet) — finite and
         # sum-to-1 by construction, explicitly tagged
@@ -451,14 +601,25 @@ class PageRankQueryEngine:
             q.result = (np.asarray(idx), np.asarray(scores))
             q.status = "degraded"
             q.graph_version = version
-        return batch
+        return None
+
+    def _solve_batch(self, seed_sets) -> np.ndarray:
+        """The cold-solve choke point: hub-combination + bounded residual
+        push when a landmark index is attached (exact-solve fallback per
+        column lives inside ``answer``), else the classic batched power
+        iteration."""
+        if self.landmarks is not None:
+            self.landmarks.ensure(self.graph_version)
+            X, _ = self.landmarks.answer(seed_sets)
+            return X
+        return np.asarray(self.engine.ppr(seed_sets,
+                                          n_iters=self.n_iters))
 
     def _serve_ppr(self, batch) -> np.ndarray | None:
         """One batched PPR dispatch, health-checked: the (N, Q) matrix, or
         ``None`` if the dispatch raised or produced a poisoned batch."""
         try:
-            PPR = np.asarray(self.engine.ppr([q.seeds for q in batch],
-                                             n_iters=self.n_iters))
+            PPR = np.asarray(self._solve_batch([q.seeds for q in batch]))
         except Exception:       # noqa: BLE001 — degradation contract
             return None
         atol = self.resilience.healthy_atol

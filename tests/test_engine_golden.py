@@ -167,6 +167,35 @@ def test_committed_bench_artifact_precision_claims_hold():
             "speedup must not be claimed on emulated dtypes")
 
 
+def test_committed_bench_artifact_serve_claims_hold():
+    """The ``serve`` block (benchmarks/serve_bench.py) must keep the
+    acceptance claims: the Zipf(1.1) workload over N=5000 has >= 0.8
+    achievable hit rate, cached hits answer >= 10x faster at p50 than
+    the pre-PR cold solve, hub-combination answers hold top-100 overlap
+    and Kendall-tau >= 0.99 vs the exact oracle, and every cache entry
+    surviving the delta stream matches a post-delta cold solve within
+    1e-5 L1."""
+    with open(BENCH_PATH) as f:
+        serve = json.load(f)["serve"]
+    assert serve["n"] == 5000 and serve["zipf_s"] == 1.1
+    claim = serve["claim"]
+    assert claim["achievable_ge_0.8"] is True
+    assert claim["achievable_hit_rate"] >= 0.8
+    assert claim["hit_p50_ge_10x_faster"] is True
+    assert claim["hit_p50_speedup_vs_cold"] >= 10.0
+    assert claim["overlap_ge_0.99"] is True
+    assert claim["min_top100_overlap"] >= 0.99
+    assert claim["tau_ge_0.99"] is True
+    assert claim["min_kendall_tau_top100"] >= 0.99
+    assert claim["parity_le_1e-5"] is True
+    assert claim["post_delta_parity_l1"] <= 1e-5
+    # the measured run must have actually exercised both cache outcomes
+    # and the delta-aware invalidation
+    assert serve["cache"]["hits"] > 0 and serve["cache"]["misses"] > 0
+    assert serve["cache"]["invalidations"] > 0
+    assert serve["graph_version"] > 0
+
+
 def test_committed_bench_artifact_observability_claims_hold():
     """The ``observability`` block (benchmarks/observability_bench.py) must
     keep the acceptance claims: the solve-trace ring and the full metrics

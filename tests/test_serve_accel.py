@@ -1,0 +1,232 @@
+"""Serve acceleration: result cache + landmark (hub) PPR index.
+
+Three layers, mirroring the serve-path design:
+
+* :class:`repro.serve.cache.ResultCache` unit behavior — canonical keys
+  (precision tiers never alias), LRU eviction, version-mismatch misses,
+  and the first-order delta-aware invalidation score.
+* End-to-end delta-aware invalidation on a ring graph, where PPR mass
+  decays exponentially with hop distance: a delta at node ``u`` must
+  drop cached entries seeded NEXT to ``u`` (they re-solve and match the
+  post-delta cold solve) while entries seeded far away survive AND
+  still match the post-delta cold solve within the parity gate.
+* :class:`repro.pagerank.landmarks.LandmarkIndex` properties on every
+  backend tier: hub-combination answers are distributions (non-negative,
+  sum-to-1) and match the exact batched solver within the fidelity
+  gates; exhausting the push budget falls back to the exact solver
+  rather than serving an unconverged answer.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.graph import generators as gen
+from repro.graph.delta import GraphDelta
+from repro.pagerank.dynamic import DynamicPageRankEngine
+from repro.pagerank.engine import BACKENDS, SHARDED_BACKENDS, PageRankEngine
+from repro.pagerank.fidelity import kendall_tau, topk_overlap
+from repro.pagerank.landmarks import LandmarkIndex
+from repro.serve import PageRankQueryEngine, ResultCache
+
+
+# --------------------------------------------------------------------- #
+# ResultCache unit behavior
+# --------------------------------------------------------------------- #
+def test_cache_key_is_canonical_over_seed_order_and_dupes():
+    a = ResultCache.key([5, 9, 5], "f32")
+    b = ResultCache.key(np.asarray([9, 5]), "f32")
+    assert a == b == ("f32", (5, 9))
+
+
+def test_cache_key_precision_tiers_never_alias():
+    seeds = [3, 1, 4]
+    keys = {ResultCache.key(seeds, p) for p in ("f32", "bf16", "f16",
+                                                "int8")}
+    assert len(keys) == 4
+    cache = ResultCache(capacity=8)
+    cache.put(ResultCache.key(seeds, "f32"), np.ones(4), 0)
+    assert cache.get(ResultCache.key(seeds, "bf16"), 0) is None
+    assert cache.get(ResultCache.key(seeds, "f32"), 0) is not None
+
+
+def test_cache_lru_eviction_order_and_counter():
+    cache = ResultCache(capacity=2)
+    k = [ResultCache.key([i], "f32") for i in range(3)]
+    cache.put(k[0], np.zeros(2), 0)
+    cache.put(k[1], np.zeros(2), 0)
+    assert cache.get(k[0], 0) is not None   # touch k0: k1 becomes LRU
+    assert cache.put(k[2], np.zeros(2), 0) == 1
+    assert cache.evictions == 1 and len(cache) == 2
+    assert k[1] not in cache and k[0] in cache and k[2] in cache
+
+
+def test_cache_version_mismatch_is_a_miss_and_drops_the_entry():
+    cache = ResultCache(capacity=4)
+    key = ResultCache.key([7], "f32")
+    cache.put(key, np.ones(3), version=0)
+    assert cache.get(key, version=1) is None
+    assert cache.misses == 1 and key not in cache
+
+
+def test_cache_invalidate_scores_first_order_impact():
+    cache = ResultCache(capacity=4, keep_eps=1e-6)
+    hot = np.zeros(10)
+    hot[4] = 0.3                            # parks mass on the delta column
+    cold = np.zeros(10)
+    cold[9] = 0.3                           # mass far from the delta
+    cache.put(ResultCache.key([4], "f32"), hot, 0)
+    cache.put(ResultCache.key([9], "f32"), cold, 0)
+    dropped, kept = cache.invalidate(np.asarray([4]), np.asarray([0.5]),
+                                     version=1)
+    assert (dropped, kept) == (1, 1)
+    assert cache.invalidations == 1
+    # the survivor was re-stamped: it hits at the NEW version
+    assert cache.get(ResultCache.key([9], "f32"), 1) is not None
+    assert cache.get(ResultCache.key([4], "f32"), 1) is None
+
+
+def test_cache_invalidate_none_cols_flushes_everything():
+    cache = ResultCache(capacity=4)
+    for i in range(3):
+        cache.put(ResultCache.key([i], "f32"), np.zeros(2), 0)
+    assert cache.invalidate(None, None, version=1) == (3, 0)
+    assert len(cache) == 0 and cache.invalidations == 3
+
+
+# --------------------------------------------------------------------- #
+# Delta-aware invalidation end to end (ring graph: exponential decay)
+# --------------------------------------------------------------------- #
+def _ring(n: int) -> tuple[np.ndarray, np.ndarray]:
+    i = np.arange(n, dtype=np.int32)
+    return (np.concatenate([i, i]),
+            np.concatenate([(i + 1) % n, (i - 1) % n]).astype(np.int32))
+
+
+def test_delta_aware_invalidation_on_ring():
+    n = 400
+    src, dst = _ring(n)
+    eng = DynamicPageRankEngine(src, dst, n, backend="ell")
+    eng.run_tol(1e-8)
+    cache = ResultCache(capacity=16)
+    qe = PageRankQueryEngine(eng, n_iters=200, max_batch=4, cache=cache)
+
+    near, far = [199, 201], [10, 50]
+    q_near = qe.submit(0, near)
+    q_far = qe.submit(1, far)
+    qe.flush()
+    assert q_near.cache_outcome == "miss" and q_far.cache_outcome == "miss"
+    assert len(cache) == 2
+
+    # a chord at node 200: its transition column is rewritten, so the
+    # entry seeded right next to it is perturbed; seeds 150+ hops away
+    # park ~(d/2)^150 mass there — far below any gate
+    qe.push_update(GraphDelta.inserts(np.asarray([200, 210]),
+                                      np.asarray([210, 200])))
+    q_near2 = qe.submit(2, near)
+    q_far2 = qe.submit(3, far)
+    qe.flush()
+    assert qe.graph_version == 1
+    assert q_near2.cache_outcome == "miss", "perturbed entry must re-solve"
+    assert q_far2.cache_outcome == "hit", "distant entry must survive"
+
+    # BOTH answers must match a post-delta cold solve of the new graph
+    exact = np.asarray(eng.ppr([near, far], n_iters=300))
+    key_near = ResultCache.key(near, "f32")
+    key_far = ResultCache.key(far, "f32")
+    got_near = cache._entries[key_near].ranks
+    got_far = cache._entries[key_far].ranks
+    assert float(np.abs(got_near - exact[:, 0]).sum()) <= 1e-5
+    assert float(np.abs(got_far - exact[:, 1]).sum()) <= 1e-5
+
+
+def test_cached_top_k_matches_uncached_serve():
+    n = 300
+    src, dst = gen.protein_network(n, seed=3)
+    eng = DynamicPageRankEngine(src, dst, n, backend="ell")
+    eng.run_tol(1e-7)
+    qe = PageRankQueryEngine(eng, n_iters=100, max_batch=4,
+                             cache=ResultCache(capacity=8))
+    plain = PageRankQueryEngine(DynamicPageRankEngine(src, dst, n,
+                                                      backend="ell"),
+                                n_iters=100, max_batch=4)
+    seeds = [4, 17, 99]
+    a = qe.submit(0, seeds)
+    qe.flush()
+    b = qe.submit(1, seeds)                 # repeat: served from cache
+    qe.flush()
+    c = plain.submit(0, seeds)
+    plain.flush()
+    assert b.cache_outcome == "hit" and c.cache_outcome is None
+    np.testing.assert_array_equal(a.result[0], b.result[0])
+    np.testing.assert_array_equal(b.result[0], c.result[0])
+    np.testing.assert_allclose(b.result[1], c.result[1], atol=1e-6)
+
+
+# --------------------------------------------------------------------- #
+# LandmarkIndex properties across every backend tier
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_landmark_answers_are_faithful_distributions(backend):
+    if backend in SHARDED_BACKENDS and jax.device_count() < 2:
+        pytest.skip("sharded tiers need >1 device")
+    n, seed = 200, 7
+    src, dst = gen.protein_network(n, seed=seed)
+    eng = PageRankEngine(src, dst, n, backend=backend)
+    lm = LandmarkIndex(eng, n_hubs=16, tol=1e-7, n_iters=60)
+    lm.build(0)
+    rng = np.random.default_rng(0)
+    seed_sets = [np.sort(rng.choice(n, size=3, replace=False))
+                 for _ in range(4)]
+    X, info = lm.answer(seed_sets)
+    assert X.shape == (n, 4)
+    assert float(X.min()) >= 0.0
+    np.testing.assert_allclose(X.sum(axis=0), 1.0, atol=1e-5)
+    oracle = np.asarray(eng.ppr(seed_sets, n_iters=200))
+    for j in range(4):
+        assert float(np.abs(X[:, j] - oracle[:, j]).max()) <= 1e-5
+        assert topk_overlap(X[:, j], oracle[:, j], k=50) >= 0.99
+        assert kendall_tau(X[:, j], oracle[:, j], k=50) >= 0.99
+
+
+def test_landmark_exhausted_push_budget_falls_back_to_exact():
+    n = 200
+    src, dst = gen.protein_network(n, seed=7)
+    eng = PageRankEngine(src, dst, n, backend="ell")
+    lm = LandmarkIndex(eng, n_hubs=8, tol=1e-9, max_pushes=1, n_iters=100)
+    lm.build(0)
+    seed_sets = [[3, 50], [120]]
+    X, info = lm.answer(seed_sets)
+    assert info["fallbacks"] == 2, "1-push budget cannot converge to 1e-9"
+    oracle = np.asarray(eng.ppr(seed_sets, n_iters=100))
+    np.testing.assert_allclose(X, oracle, atol=1e-6)
+
+
+def test_landmark_rebuild_policy_tracks_graph_version():
+    n = 200
+    src, dst = gen.protein_network(n, seed=1)
+    eng = PageRankEngine(src, dst, n, backend="ell")
+    lm = LandmarkIndex(eng, n_hubs=8, rebuild_every=4, n_iters=40)
+    assert not lm.built
+    lm.ensure(0)
+    assert lm.built and lm.built_version == 0
+    lm.ensure(3)                            # within the rebuild window
+    assert lm.built_version == 0
+    lm.ensure(4)                            # drift budget exceeded
+    assert lm.built_version == 4
+
+
+def test_serve_uses_landmarks_when_attached():
+    n = 300
+    src, dst = gen.protein_network(n, seed=2)
+    eng = DynamicPageRankEngine(src, dst, n, backend="ell")
+    eng.run_tol(1e-7)
+    lm = LandmarkIndex(eng, n_hubs=16, tol=1e-7, n_iters=100)
+    qe = PageRankQueryEngine(eng, n_iters=100, max_batch=4,
+                             cache=ResultCache(capacity=8), landmarks=lm)
+    q = qe.submit(0, [5, 40, 77], top_k=5)
+    qe.flush()
+    assert lm.built, "cold solve must go through the landmark index"
+    exact = np.asarray(eng.ppr([[5, 40, 77]], n_iters=200))[:, 0]
+    idx, _ = q.result
+    oracle_top = np.argsort(exact)[::-1][:len(idx)]
+    assert set(idx.tolist()) == set(oracle_top.tolist())
